@@ -1,0 +1,43 @@
+"""Shared benchmark plumbing: stable timing on one CPU device + CSV rows.
+
+Wall-clock numbers here are CPU-backend (this container has no TPU); they
+are *relative* evidence (algorithm vs algorithm on identical hardware),
+matching the paper's methodology of same-machine comparisons.  The TPU
+roofline story lives in EXPERIMENTS.md §Roofline, derived from the
+compiled dry-run instead of wall clocks.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, List
+
+import jax
+import numpy as np
+
+__all__ = ["bench", "Row", "emit", "check_sorted"]
+
+Row = Dict[str, Any]
+
+
+def bench(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 5) -> float:
+    """Median seconds/call of a nullary jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def check_sorted(out_keys, in_keys) -> None:
+    out = np.asarray(out_keys)
+    assert np.all(out[:-1] <= out[1:]), "output not sorted"
+    np.testing.assert_array_equal(np.sort(np.asarray(in_keys)), out)
+
+
+def emit(rows: Iterable[Row], header: List[str]) -> None:
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))

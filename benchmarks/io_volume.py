@@ -1,0 +1,65 @@
+"""Paper §4.5 + Appendix B: I/O-volume accounting (IS4o 48n vs s3-sort 86n).
+
+The paper's key quantitative claim for the in-place design is that IS4o
+moves ~48n bytes through the memory hierarchy per 8-byte element at one
+level of recursion, while out-of-place s3-sort moves >86n (oracle array,
+copy-back, allocation/write-allocate misses).
+
+TPU analogue measured here from the compiled artifact (no execution):
+  * bytes-accessed per element (trip-count-corrected, launch/hlo_cost)
+    of our donated in-place pipeline vs the out-of-place s3-sort pipeline;
+  * peak HBM footprint: in-place must be ~n*s + O(metadata) (donation
+    reuses the input buffer), out-of-place ~2n*s.  This is the paper's
+    OOM-column experiment, statically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ips4o import SortConfig, ips4o_sort
+from repro.core.s3sort import s3_sort
+
+from benchmarks.common import Row
+
+
+def _stats(fn, x, donate: bool):
+    f = jax.jit(fn, donate_argnums=(0,) if donate else ())
+    lowered = f.lower(x)
+    compiled = lowered.compile()
+    from repro.launch.hlo_cost import analyze_hlo
+    hc = analyze_hlo(compiled.as_text())
+    mem = compiled.memory_analysis()
+    temp = getattr(mem, "temp_size_in_bytes", 0) if mem else 0
+    args = getattr(mem, "argument_size_in_bytes", 0) if mem else 0
+    alias = getattr(mem, "alias_size_in_bytes", 0) if mem else 0
+    return hc, temp, args, alias
+
+
+def run(quick: bool = False):
+    n = 1 << 18 if quick else 1 << 20
+    rows: list[Row] = []
+    x = jnp.asarray(np.random.default_rng(0).random(n, dtype=np.float32))
+    elem = x.dtype.itemsize
+    for name, fn, donate in [
+        ("is4o_inplace", lambda a: ips4o_sort(a, cfg=SortConfig()), True),
+        ("s3sort_oop", lambda a: s3_sort(a, cfg=SortConfig()), False),
+    ]:
+        hc, temp, args, alias = _stats(fn, x, donate)
+        rows.append({
+            "bench": "io_volume", "algo": name, "n": n,
+            "bytes_per_elem": round(hc.bytes / n, 1),
+            "hard_bytes_per_elem": round(hc.bytes_min / n, 1),
+            "peak_temp_bytes": int(temp),
+            "peak_over_input": round((temp + args) / (n * elem), 2),
+            "aliased_bytes": int(alias),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(), ["bench", "algo", "n", "bytes_per_elem",
+                 "hard_bytes_per_elem", "peak_temp_bytes",
+                 "peak_over_input", "aliased_bytes"])

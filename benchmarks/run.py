@@ -1,0 +1,71 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  sort_sequential    Fig. 6 / 16-19   sequential sizes x algos
+  sort_distributions Fig. 8 / 9-11    nine input distributions
+  sort_datatypes     Fig. 12-14       Pair / Quartet / 100Bytes payloads
+  sort_scaling       Fig. 7 / 15      shard_map scaling (subprocess per d)
+  io_volume          §4.5 / App. B    in-place vs out-of-place I/O volume
+  moe_dispatch       framework role   sort-based vs one-hot MoE dispatch
+
+``python -m benchmarks.run [--quick] [--only NAME]`` prints one CSV block
+per table plus a Table-1-style summary.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "sort_sequential",
+    "sort_distributions",
+    "sort_datatypes",
+    "sort_scaling",
+    "io_volume",
+    "moe_dispatch",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    import importlib
+
+    from benchmarks.common import emit
+
+    failures = 0
+    all_rows = {}
+    for name in MODULES:
+        if args.only and name != args.only:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.perf_counter()
+        print(f"\n== {name} ==", flush=True)
+        try:
+            rows = mod.run(quick=args.quick)
+        except Exception as e:  # pragma: no cover
+            import traceback
+            traceback.print_exc()
+            print(f"FAILED {name}: {type(e).__name__}: {e}")
+            failures += 1
+            continue
+        all_rows[name] = rows
+        if rows:
+            emit(rows, list(rows[0].keys()))
+        print(f"-- {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
+
+    # Table-1-style summary: our speedups vs library sort
+    dist = all_rows.get("sort_distributions")
+    if dist:
+        sp = [r["speedup_vs_jnp"] for r in dist]
+        print("\n== summary (Table 1 analogue) ==")
+        print(f"is4o vs jnp.sort speedup: min={min(sp):.2f} "
+              f"median={sorted(sp)[len(sp)//2]:.2f} max={max(sp):.2f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

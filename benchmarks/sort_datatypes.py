@@ -1,0 +1,60 @@
+"""Paper Fig. 12-14: element types with payloads (Pair / Quartet / 100Bytes).
+
+Key + payload sorts: the paper's Pair = 8B key + 8B payload, Quartet =
+24B key + 8B (we model the lexicographic 3-word key with a u64 primary
+key + 2-word payload — same bytes moved), 100Bytes = 10B key + 90B
+payload (u64 key + 12 u64 words ~ 104B).  The paper's observation that
+moving elements twice hurts large payloads is visible as ns/elem growth
+with payload width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ips4o import SortConfig, ips4o_sort
+
+from benchmarks.common import Row, bench
+
+N = 1 << 20
+
+TYPES = {            # payload words of 8 bytes alongside a u64 key
+    "Key8": 0,       # bare 64-bit element (paper: double)
+    "Pair": 1,       # 8B key + 8B payload
+    "Quartet": 3,    # 32B element
+    "100Bytes": 12,  # ~104B element
+}
+
+
+def run(quick: bool = False):
+    n = (1 << 18) if quick else N
+    rows: list[Row] = []
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.integers(0, 2**63 - 1, n, dtype=np.uint64))
+    for name, words in TYPES.items():
+        if words:
+            payload = jnp.asarray(
+                rng.integers(0, 2**63 - 1, (n, words), dtype=np.uint64)
+            )
+            f = jax.jit(lambda k, v: ips4o_sort(k, v, cfg=SortConfig()))
+            ok, ov = f(keys, payload)
+            # payload rows must follow their key
+            order = np.argsort(np.asarray(keys), kind="stable")
+            np.testing.assert_array_equal(np.asarray(ok), np.asarray(keys)[order])
+            t = bench(lambda: f(keys, payload))
+        else:
+            f = jax.jit(lambda k: ips4o_sort(k, cfg=SortConfig()))
+            t = bench(lambda: f(keys))
+        rows.append({
+            "bench": "datatypes", "type": name,
+            "elem_bytes": 8 * (1 + words), "n": n,
+            "ns_per_elem": round(t / n * 1e9, 2),
+            "MB_per_s": round(8 * (1 + words) * n / t / 1e6, 1),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(), ["bench", "type", "elem_bytes", "n", "ns_per_elem", "MB_per_s"])

@@ -1,0 +1,42 @@
+"""Paper Fig. 8 / 9-11 (robustness): all nine input distributions.
+
+Shows the equality-bucket machinery (§4.4) turning duplicate-heavy inputs
+(RootDup/TwoDup/EightDup/Ones) into easy instances, as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ips4o import SortConfig, ips4o_sort
+from repro.data.distributions import DISTRIBUTIONS, make_input
+
+from benchmarks.common import Row, bench, check_sorted
+
+N = 1 << 20
+
+
+def run(quick: bool = False):
+    n = (1 << 18) if quick else N
+    rows: list[Row] = []
+    sorter = jax.jit(lambda a: ips4o_sort(a, cfg=SortConfig()))
+    lib = jax.jit(jnp.sort)
+    for dist in DISTRIBUTIONS:
+        x = jnp.asarray(make_input(dist, n, np.float32, seed=7))
+        check_sorted(sorter(x), x)
+        t_ours = bench(lambda: sorter(x))
+        t_lib = bench(lambda: lib(x))
+        rows.append({
+            "bench": "distributions", "distribution": dist, "n": n,
+            "is4o_ns_per_elem": round(t_ours / n * 1e9, 2),
+            "jnp_sort_ns_per_elem": round(t_lib / n * 1e9, 2),
+            "speedup_vs_jnp": round(t_lib / t_ours, 2),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(), ["bench", "distribution", "n", "is4o_ns_per_elem",
+                 "jnp_sort_ns_per_elem", "speedup_vs_jnp"])

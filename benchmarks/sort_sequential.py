@@ -1,0 +1,53 @@
+"""Paper Fig. 6 / 16-19: sequential sort, Uniform input, across sizes.
+
+IS4o (ours, in-place via donation) vs s3-sort (out-of-place samplesort,
+the paper's non-in-place baseline) vs jnp.sort (XLA's library sort — the
+std::sort role).  ns/element, f32 and u32 keys.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ips4o import SortConfig, ips4o_sort
+from repro.core.s3sort import s3_sort
+
+from benchmarks.common import Row, bench, check_sorted
+
+SIZES = [1 << 16, 1 << 18, 1 << 20, 1 << 22]
+DTYPES = [jnp.float32, jnp.uint32]
+
+
+def run(quick: bool = False):
+    sizes = SIZES[:2] if quick else SIZES
+    rows: list[Row] = []
+    for dtype in DTYPES:
+        for n in sizes:
+            rng = np.random.default_rng(42)
+            if dtype == jnp.float32:
+                x = jnp.asarray(rng.random(n, dtype=np.float32))
+            else:
+                x = jnp.asarray(
+                    rng.integers(0, 2**32 - 1, n, dtype=np.uint32)
+                )
+            algos = {
+                "is4o": jax.jit(lambda a: ips4o_sort(a, cfg=SortConfig())),
+                "s3sort": jax.jit(lambda a: s3_sort(a, cfg=SortConfig())),
+                "jnp.sort": jax.jit(jnp.sort),
+            }
+            for name, f in algos.items():
+                check_sorted(f(x), x)
+                t = bench(lambda f=f: f(x))
+                rows.append({
+                    "bench": "sequential", "algo": name,
+                    "dtype": jnp.dtype(dtype).name, "n": n,
+                    "ns_per_elem": round(t / n * 1e9, 2),
+                    "s_per_call": round(t, 5),
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(), ["bench", "algo", "dtype", "n", "ns_per_elem", "s_per_call"])

@@ -1,0 +1,72 @@
+"""Batched serving example: prefill + KV-cache decode with the Engine.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch yi-9b] [--new 24]
+
+Demonstrates:
+  * jitted prefill and decode steps with donated (in-place) KV cache;
+  * the scheduler ordering requests by remaining length (the sorting
+    engine's serving role) to minimize padding waste;
+  * greedy generation determinism: the same prompt twice -> same tokens.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_reduced
+from repro.models.transformer import init_model
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.scheduler import Request, Scheduler
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+
+    # scheduler: admit a ragged queue, batch by sorted remaining length
+    rng = np.random.default_rng(0)
+    sched = Scheduler(batch_size=args.batch)
+    lens = {}
+    for i in range(args.batch * 2):
+        plen = int(rng.integers(4, args.prompt_len + 1))
+        lens[i] = plen
+        sched.submit(Request(uid=i, prompt_len=plen,
+                             max_new=int(rng.integers(8, args.new + 1))))
+    wave = sched.next_batch()
+    print(f"scheduler picked {len(wave)} of {args.batch * 2} requests "
+          f"(remaining {[r.remaining for r in wave]} — sorted, min pad waste)")
+
+    scfg = ServeConfig(max_seq=args.prompt_len + args.new + 8,
+                       batch_size=args.batch)
+    engine = Engine(cfg, scfg, mesh, params)
+
+    prompts = np.zeros((args.batch, args.prompt_len), np.int32)
+    for r_i, r in enumerate(wave[: args.batch]):
+        plen = lens[r.uid]
+        prompts[r_i, -plen:] = rng.integers(0, cfg.vocab_size, plen)
+    prompts = jnp.asarray(prompts)
+
+    with mesh:
+        out1 = engine.generate(prompts, args.new)
+    print(f"generated {out1.shape} tokens; first row: {np.asarray(out1[0,:8])}...")
+
+    # determinism check (greedy): regenerate from a fresh cache
+    engine2 = Engine(cfg, scfg, mesh, params)
+    with mesh:
+        out2 = engine2.generate(prompts, args.new)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    print("greedy decode deterministic across engine instances — OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

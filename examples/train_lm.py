@@ -1,0 +1,40 @@
+"""End-to-end training driver (deliverable (b)): train a reduced-config LM
+for a few hundred steps on the synthetic pipeline, with checkpoint/restart.
+
+  PYTHONPATH=src python examples/train_lm.py                 # yi-9b reduced, 120 steps
+  PYTHONPATH=src python examples/train_lm.py --arch deepseek-moe-16b --steps 60
+
+This is a thin preset over the production launcher
+(``python -m repro.launch.train``), which the multi-pod configs also use.
+Kill it mid-run and re-launch with the same --ckpt-dir to see restart.
+"""
+import argparse
+import sys
+import tempfile
+
+from repro.launch.train import main as train_main
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        rc = train_main([
+            "--arch", args.arch, "--reduced",
+            "--steps", str(args.steps),
+            "--batch", str(args.batch),
+            "--seq", str(args.seq),
+            "--microbatch", str(max(args.batch // 2, 1)),
+            "--ckpt-dir", ckpt,
+            "--ckpt-every", str(max(args.steps // 2, 1)),
+        ])
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,36 @@
+"""The paper's own tuning parameters (§4.7) and our TPU-adapted defaults.
+
+Paper (x86 multicore, C++):
+    k = 256 buckets, alpha = 0.2 log n oversampling, beta = 1
+    overpartitioning, base case n0 = 16 (insertion sort), block size
+    b = max(1, 2^(11 - log2 s)) elements (~2 KiB).
+
+TPU adaptation (DESIGN.md §2): the base case is a VMEM-resident window
+(n0 = 8192 elements, not 16 — VMEM plays the role of L1/L2 and a
+*vectorized* bitonic pass replaces insertion sort), k is capped at 128 per
+level to bound the splitter-compare broadcast, and the distribution tile
+(4096) plays the role of the 2 KiB buffer block.  ``alpha`` is the paper's
+0.2 log n (see core/sampling.oversampling_factor).
+"""
+from __future__ import annotations
+
+from repro.core.ips4o import SortConfig
+
+__all__ = ["PAPER_CPU", "TPU_DEFAULT", "TPU_BIG_PAYLOAD"]
+
+# The paper's values, recorded for reference (running them verbatim on TPU
+# is pessimal: n0 = 16 would mean ~n/16 window sorts of 16 elements).
+PAPER_CPU = {
+    "k": 256,
+    "alpha": "0.2 * log2(n)",
+    "beta": 1,
+    "n0": 16,
+    "block_bytes": 2048,
+}
+
+# Our defaults (= SortConfig defaults; benchmarks use these).
+TPU_DEFAULT = SortConfig()
+
+# Large payloads move twice per pass (the paper's own §6 caveat for
+# Quartet/100Bytes): fewer, larger buckets per level cut pass count.
+TPU_BIG_PAYLOAD = SortConfig(base_case=16384, kmax=64, tile=8192)

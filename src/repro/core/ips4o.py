@@ -1,0 +1,256 @@
+"""IPS4o: In-place Parallel Super Scalar Samplesort, TPU/JAX formulation.
+
+Structure (see DESIGN.md §4 for the full mapping from the paper):
+
+  * recursion is flattened into at most two *level passes* (the paper's
+    "adaptive number of buckets on the last two levels", §4.7, combined with
+    the strictly-in-place recursion elimination, §4.6);
+  * each level pass = sample -> branchless classification -> stable
+    block-structured partition (``core.partition``);
+  * equality buckets (§4.4) are always on: odd local bucket ids hold runs of
+    identical keys and are skipped by deeper levels and the base case;
+  * base case = segmented overlapped-window sort: two passes of
+    per-window (bucket, key) lexicographic sorts at window offsets 0 and W/2.
+    Every non-trivial bucket has size <= W/2 (checked!), so it is interior to
+    a window of one of the two passes and ends up fully sorted;
+  * a *robustness fallback* (data-dependent, via ``lax.cond``) runs a plain
+    stable sort in the (w.h.p. impossible) event a bucket exceeds W/2 — the
+    static-shape analogue of the paper's recursion-until-small guarantee;
+  * padding to a multiple of W uses the key-type sentinel and a dedicated
+    final bucket — the analogue of the paper's overflow block.
+
+The returned permutation is value-exact vs. ``ref_sort`` (stable) for keys;
+payload association is exact per element (the base-case window sort is not
+stable across equal (bucket, key) pairs, like the paper's base case).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling
+from repro.core.classifier import classify, classify_segmented
+from repro.core.partition import stable_partition
+
+__all__ = ["SortConfig", "ips4o_sort", "is4o_sort", "plan_levels", "make_sorter"]
+
+
+@dataclass(frozen=True)
+class SortConfig:
+    """Tuning parameters (paper §4.7 defaults, adapted to VMEM sizes)."""
+
+    base_case: int = 8192          # W: base-case window (VMEM-resident)
+    kmax: int = 128                # max buckets per level (paper: 256)
+    tile: int = 4096               # distribution tile (the paper's stripe walk)
+    slack: int = 8                 # target expected bucket size = W / slack
+    max_sample: int = 8192         # cap on per-level sample size
+    seed: int = 0xC0FFEE
+    fallback: bool = True          # robustness fallback via lax.cond
+
+
+def plan_levels(n: int, cfg: SortConfig) -> List[int]:
+    """Choose the k for each of (at most two) level passes."""
+    if n <= cfg.base_case:
+        return []
+    target = -(-cfg.slack * n // cfg.base_case)  # ceil
+    k1 = max(2, 1 << math.ceil(math.log2(target)))
+    if k1 <= cfg.kmax:
+        return [k1]
+    k1 = cfg.kmax
+    k2 = max(2, 1 << math.ceil(math.log2(-(-target // k1))))
+    if k2 > cfg.kmax:
+        raise ValueError(
+            f"n={n} too large for 2 levels with kmax={cfg.kmax}, "
+            f"base_case={cfg.base_case}"
+        )
+    return [k1, k2]
+
+
+def _auto_tile(n: int, nb: int, cfg: SortConfig) -> int:
+    """Grow the tile so the (T, nb) histogram stays bounded (<= 2^26 ints)."""
+    tile = cfg.tile
+    while (n // tile) * nb > (1 << 26) and tile < cfg.base_case:
+        tile *= 2
+    return tile
+
+
+def _seg_ids(offsets: jax.Array, n: int) -> jax.Array:
+    return (
+        jnp.searchsorted(offsets, jnp.arange(n, dtype=jnp.int32), side="right").astype(
+            jnp.int32
+        )
+        - 1
+    )
+
+
+def _window_perm(keys_w: jax.Array, fb_w: jax.Array) -> jax.Array:
+    """Stable lexicographic (bucket, key) sort permutation per window."""
+    o1 = jnp.argsort(keys_w, axis=1, stable=True)
+    o2 = jnp.argsort(jnp.take_along_axis(fb_w, o1, axis=1), axis=1, stable=True)
+    return jnp.take_along_axis(o1, o2, axis=1)
+
+
+def _apply_window_perm(perm: jax.Array, a: jax.Array) -> jax.Array:
+    return jax.vmap(lambda row, p: jnp.take(row, p, axis=0))(a, perm)
+
+
+def _base_case(arrays: Any, fb: jax.Array, W: int) -> Any:
+    """Two overlapped segmented window-sort passes (DESIGN.md §4.3)."""
+    n = fb.shape[0]
+
+    def one_pass(arrays, fb, lo, hi):
+        keys = arrays["k"][lo:hi]
+        m = hi - lo
+        kw = keys.reshape(m // W, W)
+        fw = fb[lo:hi].reshape(m // W, W)
+        perm = _window_perm(kw, fw)
+
+        def fix(a):
+            aw = a[lo:hi].reshape((m // W, W) + a.shape[1:])
+            sw = _apply_window_perm(perm, aw).reshape((m,) + a.shape[1:])
+            return a.at[lo:hi].set(sw)
+
+        arrays = jax.tree.map(fix, arrays)
+        fb = fb.at[lo:hi].set(
+            _apply_window_perm(perm, fw).reshape(m)
+        )
+        return arrays, fb
+
+    arrays, fb = one_pass(arrays, fb, 0, n)
+    if n > W:  # offset pass: windows at W/2 (ends need no second pass)
+        arrays, fb = one_pass(arrays, fb, W // 2, n - W // 2)
+    return arrays
+
+
+def _stable_full_sort(arrays: Any) -> Any:
+    order = jnp.argsort(arrays["k"], stable=True)
+    return jax.tree.map(lambda a: jnp.take(a, order, axis=0), arrays)
+
+
+def _sort_padded(arrays: Any, n_real: int, cfg: SortConfig, levels: Sequence[int]) -> Any:
+    """Sort padded arrays dict (pads = sentinel keys at the tail)."""
+    keys = arrays["k"]
+    n = keys.shape[0]
+    W = cfg.base_case
+    rng = jax.random.PRNGKey(cfg.seed)
+
+    if not levels:
+        # Single window: plain stable base case (the paper's smallSort).
+        return _stable_full_sort(arrays)
+
+    # ---- Level 1: global splitters --------------------------------------
+    k1 = levels[0]
+    r1, r2 = jax.random.split(rng)
+    m1 = min(
+        max(sampling.oversampling_factor(n_real) * k1, k1), cfg.max_sample, n_real
+    )
+    sample_pos = jax.random.randint(r1, (m1,), 0, n_real)
+    sample = jnp.sort(jnp.take(keys, sample_pos, axis=0))
+    spl1 = sampling.select_splitters(sample, k1)
+    b1 = classify(keys, spl1, k1)
+    is_pad = jnp.arange(n, dtype=jnp.int32) >= n_real
+    nb1 = 2 * k1 + 1  # +1: dedicated pad bucket (the overflow-block analogue)
+    b1 = jnp.where(is_pad, 2 * k1, b1)
+    arrays, off1 = stable_partition(b1, arrays, nb1, _auto_tile(n, nb1, cfg))
+    keys = arrays["k"]
+
+    if len(levels) == 1:
+        offsets, nb = off1, nb1
+        pad_bucket = 2 * k1
+    else:
+        # ---- Level 2: per-segment splitters ------------------------------
+        k2 = levels[1]
+        seg = _seg_ids(off1, n)
+        m2 = min(max(sampling.oversampling_factor(n_real) * k2, k2), 2048)
+        seg_rngs = jax.random.split(r2, nb1)
+        pos = jax.vmap(
+            lambda r, lo, hi: sampling.sample_indices(r, m2, lo, hi)
+        )(seg_rngs, off1[:-1], off1[1:])
+        svals = jnp.sort(jnp.take(keys, pos.reshape(-1), axis=0).reshape(nb1, m2), axis=-1)
+        spl2 = sampling.select_splitters(svals, k2)  # (nb1, k2-1)
+        local = classify_segmented(keys, seg, spl2, k2)
+        comp = seg * (2 * k2) + local
+        nb = nb1 * 2 * k2
+        arrays, offsets = stable_partition(comp, arrays, nb, _auto_tile(n, nb, cfg))
+        keys = arrays["k"]
+        pad_bucket = None  # pads land in an odd (equality) bucket automatically
+
+    # ---- Base case + robustness fallback ---------------------------------
+    fb = _seg_ids(offsets, n)
+    sizes = jnp.diff(offsets)
+    ids = jnp.arange(nb, dtype=jnp.int32)
+    nontrivial = (ids % 2) == 0  # odd ids = equality buckets (all-equal)
+    if pad_bucket is not None:
+        nontrivial = nontrivial & (ids != pad_bucket)
+    violated = jnp.any(jnp.where(nontrivial, sizes, 0) > W // 2)
+
+    if cfg.fallback:
+        return jax.lax.cond(
+            violated,
+            _stable_full_sort,
+            lambda a: _base_case(a, fb, W),
+            arrays,
+        )
+    return _base_case(arrays, fb, W)
+
+
+def ips4o_sort(
+    keys: jax.Array,
+    values: Any = None,
+    cfg: SortConfig = SortConfig(),
+):
+    """Sort ``keys`` (n,) ascending; optionally permute a ``values`` pytree
+    (leaves with leading dim n) alongside.  Jit-compatible; static shapes.
+
+    NaN keys are not supported (documented limitation — comparisons against
+    splitters are not a total order under NaN; canonicalize first).
+    """
+    n = keys.shape[0]
+    if keys.ndim != 1:
+        raise ValueError("keys must be 1-D")
+    if n <= 1:
+        return keys if values is None else (keys, values)
+
+    arrays = {"k": keys}
+    if values is not None:
+        arrays["v"] = values
+
+    W = cfg.base_case
+    unit = max(W, cfg.tile)
+    n_pad = -(-n // unit) * unit
+    levels = plan_levels(n_pad, cfg)
+    if n_pad != n:
+        pad_n = n_pad - n
+        sent = sampling.sentinel_for(keys.dtype)
+
+        def pad(a):
+            padding = [(0, pad_n)] + [(0, 0)] * (a.ndim - 1)
+            return jnp.pad(a, padding)
+
+        arrays = jax.tree.map(pad, arrays)
+        arrays["k"] = arrays["k"].at[n:].set(sent)
+
+    arrays = _sort_padded(arrays, n, cfg, levels)
+
+    out_k = arrays["k"][:n]
+    if values is None:
+        return out_k
+    return out_k, jax.tree.map(lambda a: a[:n], arrays["v"])
+
+
+def is4o_sort(keys: jax.Array, values: Any = None, cfg: SortConfig = SortConfig()):
+    """IS4o — the sequential (single-core) instantiation; on TPU a single
+    core runs the same pass pipeline, so this is an alias with one stripe."""
+    return ips4o_sort(keys, values, cfg)
+
+
+def make_sorter(n: int, dtype, cfg: SortConfig = SortConfig(), donate: bool = True):
+    """Build a jitted sorter for shape (n,); ``donate=True`` gives the
+    in-place property (XLA reuses the input HBM buffer)."""
+    f = partial(ips4o_sort, cfg=cfg)
+    return jax.jit(f, donate_argnums=(0,) if donate else ())

@@ -1,0 +1,97 @@
+"""Stable block-structured distribution (paper §4.1–§4.3), TPU formulation.
+
+The paper's three partition phases map to:
+
+  local classification  -> per-tile grouping: each tile (= the VMEM-resident
+                           analogue of a thread's stripe-walk with k buffer
+                           blocks) groups its elements by bucket id.
+  prefix sum            -> per-tile histograms + exclusive scans over tiles
+                           (the paper's "prefix sum over stripes"), giving
+                           every tile's write offset inside every bucket.
+  block permutation +   -> a single gather by the precomputed permutation;
+  cleanup                  under jit the input buffer is donated, so XLA
+                           reuses it (the in-place property).  The faithful
+                           cycle-following variant lives in
+                           ``repro.kernels.permute_inplace``.
+
+The resulting permutation is *stable* (tiles in order, stable grouping within
+a tile), which the higher levels rely on.
+
+This module is also the engine of MoE token dispatch (``repro.models.moe``):
+there the "classifier" output is the router's expert id.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["tile_histogram", "stable_partition", "partition_permutation"]
+
+Pytree = Any
+
+
+def tile_histogram(bucket_tiles: jax.Array, nb: int) -> jax.Array:
+    """(T, tile) int bucket ids -> (T, nb) histogram."""
+    return jax.vmap(lambda row: jnp.bincount(row, length=nb))(bucket_tiles)
+
+
+def partition_permutation(
+    bucket: jax.Array, nb: int, tile: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Compute the stable partition permutation.
+
+    Args:
+      bucket: (n,) int32 bucket ids in [0, nb); n must be a multiple of tile.
+      nb: number of buckets (static).
+      tile: tile size (static) — the VMEM block granularity.
+
+    Returns:
+      (perm, offsets): ``sorted_x = x[perm]`` groups any payload by bucket,
+      stably; ``offsets`` (nb+1,) int32 bucket boundaries.
+    """
+    n = bucket.shape[0]
+    if n % tile:
+        raise ValueError(f"n={n} not a multiple of tile={tile}")
+    num_tiles = n // tile
+    bt = bucket.reshape(num_tiles, tile)
+
+    # Local classification: stable grouping within each tile.
+    order = jnp.argsort(bt, axis=1, stable=True)  # (T, tile)
+    bt_g = jnp.take_along_axis(bt, order, axis=1)
+
+    # Prefix sums (paper: over stripes).
+    hist = tile_histogram(bt, nb)  # (T, nb)
+    totals = hist.sum(axis=0)  # (nb,)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(totals).astype(jnp.int32)]
+    )
+    tile_off = (jnp.cumsum(hist, axis=0) - hist).astype(jnp.int32)  # excl, (T, nb)
+    run_start = (jnp.cumsum(hist, axis=1) - hist).astype(jnp.int32)  # excl, (T, nb)
+
+    # Block permutation: destination of each grouped element.
+    pos = jnp.arange(tile, dtype=jnp.int32)[None, :]
+    dest = (
+        jnp.take(offsets[:-1], bt_g, axis=0)
+        + jnp.take_along_axis(tile_off, bt_g, axis=1)
+        + (pos - jnp.take_along_axis(run_start, bt_g, axis=1))
+    )  # (T, tile)
+
+    src = (order + (jnp.arange(num_tiles, dtype=jnp.int32) * tile)[:, None]).reshape(-1)
+    perm = (
+        jnp.zeros((n,), jnp.int32).at[dest.reshape(-1)].set(src, mode="promise_in_bounds")
+    )
+    return perm, offsets
+
+
+def stable_partition(
+    bucket: jax.Array, arrays: Pytree, nb: int, tile: int
+) -> Tuple[Pytree, jax.Array]:
+    """Stably reorder every leaf of ``arrays`` so buckets are contiguous.
+
+    Returns (reordered pytree, offsets (nb+1,)).
+    """
+    perm, offsets = partition_permutation(bucket, nb, tile)
+    out = jax.tree.map(lambda a: jnp.take(a, perm, axis=0), arrays)
+    return out, offsets

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the sorting library.
+
+``ref_sort`` is the ground truth every other implementation (jnp IPS4o,
+Pallas kernels, distributed sort) is validated against.  It is a *stable*
+sort so payload association is deterministic.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ref_sort", "ref_partition"]
+
+
+def ref_sort(keys: jax.Array, values: Any = None):
+    """Stable oracle sort. Returns keys or (keys, values)."""
+    if values is None:
+        return jnp.sort(keys, stable=True)
+    order = jnp.argsort(keys, stable=True)
+    return jnp.take(keys, order, axis=0), jax.tree.map(
+        lambda v: jnp.take(v, order, axis=0), values
+    )
+
+
+def ref_partition(
+    bucket: jax.Array, arrays: Any, nb: int
+) -> Tuple[Any, jax.Array]:
+    """Stable bucket-grouping oracle (counting sort via stable argsort)."""
+    order = jnp.argsort(bucket, stable=True)
+    out = jax.tree.map(lambda a: jnp.take(a, order, axis=0), arrays)
+    hist = jnp.bincount(bucket, length=nb)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(hist).astype(jnp.int32)]
+    )
+    return out, offsets

@@ -1,0 +1,71 @@
+"""s3-sort: non-in-place Super Scalar Samplesort [Sanders & Winkel 2004].
+
+The paper's closest non-in-place competitor and its own starting point.  We
+implement it as a baseline with the *same* classifier but the out-of-place
+distribution structure the paper criticizes in §4.5 / Appendix B:
+
+  * an explicit **oracle array** of bucket ids is materialized (s3-sort's
+    trademark: classify once, store the oracle, then distribute);
+  * elements are scattered into a **freshly allocated** output array (no
+    buffer donation -> 2n live HBM, the "OOM column" in Table 1);
+  * the result is copied back (modelled by not donating).
+
+Used by benchmarks/io_volume.py to reproduce the paper's 48n-vs-86n I/O
+volume comparison, with bytes measured from XLA's cost analysis instead of
+hardware counters.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling
+from repro.core.classifier import classify
+from repro.core.ips4o import SortConfig, plan_levels
+from repro.core.ref import ref_partition
+
+__all__ = ["s3_sort"]
+
+
+def s3_sort(keys: jax.Array, values: Any = None, cfg: SortConfig = SortConfig()):
+    """Out-of-place samplesort baseline (one distribution level + small sort).
+
+    Deliberately keeps the oracle array and out-of-place scatter alive so the
+    memory/IO comparison against IPS4o is faithful to Appendix B.
+    """
+    n = keys.shape[0]
+    if n <= 1:
+        return keys if values is None else (keys, values)
+    levels = plan_levels(n, cfg)
+    arrays = {"k": keys}
+    if values is not None:
+        arrays["v"] = values
+    if not levels:
+        order = jnp.argsort(keys, stable=True)
+        out = jax.tree.map(lambda a: jnp.take(a, order, axis=0), arrays)
+        return out["k"] if values is None else (out["k"], out.get("v"))
+
+    k = levels[0]
+    m = min(max(sampling.oversampling_factor(n) * k, k), cfg.max_sample, n)
+    pos = jax.random.randint(jax.random.PRNGKey(cfg.seed), (m,), 0, n)
+    spl = sampling.select_splitters(jnp.sort(jnp.take(keys, pos)), k)
+    oracle = classify(keys, spl, k)  # the materialized oracle array
+    # Out-of-place distribution into fresh arrays.
+    out, offsets = ref_partition(oracle, arrays, 2 * k)
+    # Segment-local small sorts (oracle-free, vendor sorter as base case).
+    seg = (
+        jnp.searchsorted(
+            offsets, jnp.arange(n, dtype=jnp.int32), side="right"
+        ).astype(jnp.int32)
+        - 1
+    )
+    o1 = jnp.argsort(out["k"], stable=True)
+    o2 = jnp.argsort(jnp.take(seg, o1), stable=True)
+    order = jnp.take(o1, o2)
+    final = jax.tree.map(lambda a: jnp.take(a, order, axis=0), out)
+    if values is None:
+        return final["k"]
+    return final["k"], final["v"]

@@ -1,0 +1,91 @@
+"""Splitter sampling and branchless search-tree construction (paper §3, §4).
+
+The paper samples alpha*k - 1 elements, sorts them, picks k-1 equidistant
+splitters, and stores them in an implicit binary search tree (breadth-first
+layout) so that classification is a branch-free descent
+``i <- 2i + (e > tree[i])``.
+
+On TPU the descent is vectorized: one VPU lane per element, log2(k) identical
+steps, zero divergence — the architectural analogue of "no branch
+mispredictions".
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "tree_permutation",
+    "build_tree",
+    "sentinel_for",
+    "oversampling_factor",
+    "select_splitters",
+    "sample_indices",
+]
+
+
+@functools.lru_cache(maxsize=None)
+def tree_permutation(k: int) -> np.ndarray:
+    """Static permutation mapping BFS tree slots -> sorted-splitter indices.
+
+    ``tree[node] = splitters[perm[node]]`` for node in 1..k-1 reproduces the
+    s3-sort layout: the root holds the median splitter, etc.  Slot 0 is
+    unused (descent starts at index 1).
+    """
+    if k & (k - 1):
+        raise ValueError(f"k must be a power of two, got {k}")
+    perm = np.zeros(k, np.int64)
+
+    def rec(node: int, lo: int, hi: int) -> None:
+        if lo >= hi:
+            return
+        mid = (lo + hi) // 2
+        perm[node] = mid
+        rec(2 * node, lo, mid)
+        rec(2 * node + 1, mid + 1, hi)
+
+    rec(1, 0, k - 1)
+    return perm
+
+
+def build_tree(splitters: jax.Array, k: int) -> jax.Array:
+    """Lay out sorted splitters (..., k-1) into BFS tree slots (..., k)."""
+    perm = jnp.asarray(tree_permutation(k))
+    return jnp.take(splitters, perm, axis=-1)
+
+
+def sentinel_for(dtype) -> jax.Array:
+    """Largest representable value of ``dtype`` — used for padding and as the
+    upper splitter of the last bucket (the paper's ``s_k = +inf``)."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.finfo(dtype).max, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+def oversampling_factor(n: int) -> int:
+    """Paper §4.7: alpha = 0.2 * log2(n), at least 1."""
+    return max(1, int(0.2 * math.log2(max(n, 2))))
+
+
+def sample_indices(rng: jax.Array, num: int, lo, hi) -> jax.Array:
+    """Uniform sample positions in [lo, hi); lo/hi may be traced scalars.
+
+    ``hi - lo`` may be zero (empty segment) — indices clamp to ``lo`` which is
+    harmless because no element classifies into an empty segment.
+    """
+    u = jax.random.uniform(rng, (num,))
+    size = jnp.maximum(hi - lo, 1)
+    idx = lo + jnp.floor(u * size).astype(jnp.int32)
+    return jnp.clip(idx, lo, jnp.maximum(hi - 1, lo))
+
+
+def select_splitters(sorted_sample: jax.Array, k: int) -> jax.Array:
+    """Pick k-1 equidistant splitters from a sorted sample (..., m)."""
+    m = sorted_sample.shape[-1]
+    idx = np.clip(((np.arange(1, k) * m) // k), 0, m - 1)
+    return jnp.take(sorted_sample, jnp.asarray(idx), axis=-1)

@@ -1,0 +1,93 @@
+"""The paper's nine benchmark input distributions (§5) + element types.
+
+Uniform, Exponential, AlmostSorted (Shun et al.), RootDup, TwoDup, EightDup
+(Edelkamp et al.), Sorted, ReverseSorted, Ones — generated deterministically
+from a seed, as numpy arrays (host-side data pipeline).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+__all__ = ["DISTRIBUTIONS", "make_input", "make_payload", "ELEMENT_TYPES"]
+
+
+def _uniform(rng, n, dtype):
+    if np.issubdtype(dtype, np.floating):
+        return rng.random(n).astype(dtype)
+    return rng.integers(0, np.iinfo(dtype).max, n, dtype=dtype)
+
+
+def _exponential(rng, n, dtype):
+    x = rng.exponential(size=n)
+    if np.issubdtype(dtype, np.floating):
+        return x.astype(dtype)
+    return np.minimum(x * (1 << 20), np.iinfo(dtype).max).astype(dtype)
+
+
+def _almost_sorted(rng, n, dtype):
+    x = np.sort(_uniform(rng, n, dtype))
+    num_swaps = max(1, int(np.sqrt(n)))
+    i = rng.integers(0, n, num_swaps)
+    j = rng.integers(0, n, num_swaps)
+    x[i], x[j] = x[j].copy(), x[i].copy()
+    return x
+
+
+def _root_dup(rng, n, dtype):
+    return (np.arange(n) % max(1, int(np.floor(np.sqrt(n))))).astype(dtype)
+
+
+def _two_dup(rng, n, dtype):
+    i = np.arange(n, dtype=np.uint64)
+    return ((i * i + n // 2) % n).astype(dtype)
+
+
+def _eight_dup(rng, n, dtype):
+    i = np.arange(n, dtype=np.uint64)
+    return (((i**8) + n // 2) % n).astype(dtype)
+
+
+def _sorted(rng, n, dtype):
+    return np.sort(_uniform(rng, n, dtype))
+
+
+def _reverse_sorted(rng, n, dtype):
+    return np.sort(_uniform(rng, n, dtype))[::-1].copy()
+
+
+def _ones(rng, n, dtype):
+    return np.ones(n, dtype)
+
+
+DISTRIBUTIONS = {
+    "Uniform": _uniform,
+    "Exponential": _exponential,
+    "AlmostSorted": _almost_sorted,
+    "RootDup": _root_dup,
+    "TwoDup": _two_dup,
+    "EightDup": _eight_dup,
+    "Sorted": _sorted,
+    "ReverseSorted": _reverse_sorted,
+    "Ones": _ones,
+}
+
+# Paper §5 element types: double / Pair / Quartet / 100Bytes.  Payload is a
+# (n, payload_words) uint64 block permuted alongside the key.
+ELEMENT_TYPES: Dict[str, Tuple[np.dtype, int]] = {
+    "double": (np.dtype(np.float64), 0),
+    "Pair": (np.dtype(np.float64), 1),
+    "Quartet": (np.dtype(np.float64), 3),
+    "100Bytes": (np.dtype(np.uint64), 12),  # 10B key -> u64 key + 90B payload
+}
+
+
+def make_input(name: str, n: int, dtype=np.float32, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return DISTRIBUTIONS[name](rng, n, np.dtype(dtype))
+
+
+def make_payload(n: int, words: int, seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << 62, (n, words), dtype=np.uint64)

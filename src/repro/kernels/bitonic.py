@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: segmented in-VMEM bitonic sort (the base case).
+
+The paper's base case is insertion sort run while the bucket is
+cache-resident (§4.7: "on the last level, we perform the base case sorting
+immediately after the bucket has been completely filled ... more
+cache-friendly").  The TPU analogue of "cache-resident small sort" is a
+branch-free **bitonic sorting network** executed entirely inside VMEM on one
+window of W elements: O(W log^2 W) compare-exchanges, every one a dense
+(rows, lanes) VPU select with zero data-dependent control flow — insertion
+sort's data-dependent inner loop would be poison on a vector unit.
+
+The sort key is the lexicographic pair (bucket_id, key): this makes the
+window sort *segmented* — bucket boundaries inside the window are respected
+automatically — which is what lets IPS4o's overlapped-window base case fix
+bucket-straddling tiles (DESIGN.md §4.3).  A payload index rides along so
+the wrapper can permute arbitrary payload pytrees.
+
+Each compare-exchange round at distance d is expressed as a static reshape
+(W,) -> (W/2d, 2, d) so partners (idx XOR d) sit in adjacent sub-rows; the
+direction bit (idx AND 2*size) is constant per sub-row.  All shapes static.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bitonic_sort_windows"]
+
+
+def _cmp_exchange(b, k, v, size: int, d: int, W: int):
+    """One bitonic round: partner = idx ^ d, ascending iff (idx & 2*size)==0."""
+    shape = (W // (2 * d), 2, d)
+    b3, k3, v3 = (x.reshape(shape) for x in (b, k, v))
+    lo = (b3[:, 0], k3[:, 0], v3[:, 0])
+    hi = (b3[:, 1], k3[:, 1], v3[:, 1])
+    # ascending iff (base_idx & (2*size)) == 0; base_idx = row * 2d.
+    row = jax.lax.broadcasted_iota(jnp.int32, (W // (2 * d), 1), 0)
+    asc = ((row * (2 * d)) & (2 * size)) == 0
+    # lexicographic (bucket, key) greater-than
+    gt = (lo[0] > hi[0]) | ((lo[0] == hi[0]) & (lo[1] > hi[1]))
+    swap = jnp.where(asc, gt, ~gt)
+    out = []
+    for a, c in zip(lo, hi):
+        na = jnp.where(swap, c, a)
+        nc = jnp.where(swap, a, c)
+        out.append(jnp.stack([na, nc], axis=1).reshape(W))
+    (b, k, v) = out
+    return b, k, v
+
+
+def _kernel(b_ref, k_ref, v_ref, bo_ref, ko_ref, vo_ref, *, W: int):
+    b = b_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    for s in range(int(math.log2(W))):
+        size = 1 << s  # ascending runs of length 2*size after this stage
+        for dp in range(s, -1, -1):
+            b, k, v = _cmp_exchange(b, k, v, size, 1 << dp, W)
+    bo_ref[0] = b
+    ko_ref[0] = k
+    vo_ref[0] = v
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort_windows(
+    bucket: jax.Array, keys: jax.Array, idx: jax.Array, *, interpret: bool = True
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort each window (row) of (num_w, W) arrays by (bucket, key).
+
+    W must be a power of two.  Returns permuted (bucket, keys, idx).
+    VMEM per grid step: 3 arrays * W * 4 B (W=8192 -> 96 KiB).
+    """
+    num_w, W = keys.shape
+    if W & (W - 1):
+        raise ValueError(f"W={W} must be a power of two")
+    spec = lambda: pl.BlockSpec((1, W), lambda i: (i, 0))
+    shapes = [
+        jax.ShapeDtypeStruct((num_w, W), bucket.dtype),
+        jax.ShapeDtypeStruct((num_w, W), keys.dtype),
+        jax.ShapeDtypeStruct((num_w, W), idx.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(_kernel, W=W),
+        grid=(num_w,),
+        in_specs=[spec(), spec(), spec()],
+        out_specs=[spec(), spec(), spec()],
+        out_shape=shapes,
+        interpret=interpret,
+    )(bucket, keys, idx)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused MoE dispatch ranking (IPS4o distribution as EP).
+
+Token->expert dispatch is the paper's distribution problem with the router
+as classifier (DESIGN.md §3).  This kernel fuses, in ONE pass over the
+token stream, what XLA would otherwise do with sort+cumsum+scatter chains:
+
+  dest[i] = expert_start[e_i] + (#tokens with expert e_i before i)
+
+The cross-tile running counters live in SMEM scratch and persist across the
+sequential TPU grid — the same "running bucket pointers on one core" idea as
+the block permutation kernel (§4.2), at token granularity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["dispatch_ranks"]
+
+LANES = 128
+
+
+def _kernel(start_ref, eid_ref, dest_ref, run_ref, *, num_experts: int, rows: int):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init():
+        for e in range(num_experts):
+            run_ref[e] = 0
+
+    eid = eid_ref[...]  # (rows, 128)
+    flat = eid.reshape(rows * LANES, 1)
+    ids = jax.lax.broadcasted_iota(jnp.int32, (1, num_experts), 1)
+    onehot = (flat == ids).astype(jnp.int32)  # (tile, E)
+    excl = jnp.cumsum(onehot, axis=0) - onehot  # rank within tile
+    rank_in_tile = jnp.sum(excl * onehot, axis=1)  # (tile,)
+    tile_hist = jnp.sum(onehot, axis=0)  # (E,)
+
+    base = jnp.zeros((rows * LANES,), jnp.int32)
+    for e in range(num_experts):  # SMEM scalar reads, unrolled (E is small)
+        sel = flat[:, 0] == e
+        base = jnp.where(sel, start_ref[e] + run_ref[e], base)
+    dest_ref[...] = (base + rank_in_tile).reshape(rows, LANES)
+
+    for e in range(num_experts):
+        run_ref[e] = run_ref[e] + tile_hist[e]
+
+
+@functools.partial(jax.jit, static_argnames=("num_experts", "rows", "interpret"))
+def dispatch_ranks(
+    expert_id: jax.Array,
+    expert_start: jax.Array,
+    *,
+    num_experts: int,
+    rows: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Destination slot per token for expert-major grouping.
+
+    Args:
+      expert_id: (n,) int32 in [0, num_experts); n multiple of rows*128.
+      expert_start: (num_experts,) int32 exclusive prefix of expert counts.
+
+    Returns (n,) int32 destinations (a permutation when starts come from the
+    true histogram).
+    """
+    n = expert_id.shape[0]
+    tile = rows * LANES
+    if n % tile:
+        raise ValueError(f"n={n} not a multiple of tile={tile}")
+    num_tiles = n // tile
+    eid2 = expert_id.reshape(num_tiles * rows, LANES)
+
+    dest = pl.pallas_call(
+        functools.partial(_kernel, num_experts=num_experts, rows=rows),
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # expert_start
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(eid2.shape, jnp.int32),
+        scratch_shapes=[pltpu.SMEM((num_experts,), jnp.int32)],
+        interpret=interpret,
+    )(expert_start, eid2)
+    return dest.reshape(n)

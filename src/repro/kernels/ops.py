@@ -1,0 +1,114 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the rest of the framework uses; each wrapper
+handles padding/reshaping, pytree payloads, and falls back to documented
+shapes.  ``interpret=True`` everywhere in this container (CPU); on real TPU
+hardware the same calls lower natively.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitonic import bitonic_sort_windows
+from repro.kernels.classify import classify_histogram
+from repro.kernels.dispatch_rank import dispatch_ranks
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.permute_inplace import permute_blocks_inplace
+
+__all__ = [
+    "classify_histogram",
+    "bitonic_sort_windows",
+    "permute_blocks_inplace",
+    "dispatch_ranks",
+    "flash_attention",
+    "flash_decode",
+    "sort_blocks",
+    "base_case_windows",
+    "moe_group_tokens",
+]
+
+
+def sort_blocks(
+    a: jax.Array,
+    block_bucket: jax.Array,
+    *,
+    k: int,
+    block_elems: int,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Group homogeneous blocks by bucket with the in-place kernel.
+
+    Returns (permuted array, (k+1,) block-boundary offsets).
+    """
+    hist = jnp.bincount(block_bucket, length=k)
+    d = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(hist).astype(jnp.int32)]
+    )
+    out = permute_blocks_inplace(
+        a, block_bucket, d, k=k, block_elems=block_elems, interpret=interpret
+    )
+    return out, d
+
+
+def base_case_windows(
+    arrays: Any, fb: jax.Array, W: int, *, interpret: bool = True
+) -> Any:
+    """Pallas version of the overlapped-window base case (both passes).
+
+    ``arrays`` is a pytree whose leaves have leading dim n (multiple of W);
+    leaf 'k' is the key array.  Permutes every leaf by the (bucket, key)
+    window sort using the bitonic kernel + an index payload.
+    """
+    n = fb.shape[0]
+
+    def one_pass(arrays, fb, lo, hi):
+        m = hi - lo
+        kw = arrays["k"][lo:hi].reshape(m // W, W)
+        fw = fb[lo:hi].reshape(m // W, W)
+        idx = jnp.broadcast_to(
+            jnp.arange(W, dtype=jnp.int32)[None, :], (m // W, W)
+        )
+        fb_s, _, perm = bitonic_sort_windows(fw, kw, idx, interpret=interpret)
+
+        def fix(a):
+            aw = a[lo:hi].reshape((m // W, W) + a.shape[1:])
+            sw = jax.vmap(lambda row, p: jnp.take(row, p, axis=0))(aw, perm)
+            return a.at[lo:hi].set(sw.reshape((m,) + a.shape[1:]))
+
+        arrays = jax.tree.map(fix, arrays)
+        fb = fb.at[lo:hi].set(fb_s.reshape(m))
+        return arrays, fb
+
+    arrays, fb = one_pass(arrays, fb, 0, n)
+    if n > W:
+        arrays, fb = one_pass(arrays, fb, W // 2, n - W // 2)
+    return arrays
+
+
+def moe_group_tokens(
+    expert_id: jax.Array,
+    tokens: jax.Array,
+    num_experts: int,
+    *,
+    rows: int = 8,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Group tokens expert-major using the fused dispatch-rank kernel.
+
+    Returns (grouped tokens, (E+1,) offsets, dest permutation for un-group).
+    """
+    n = expert_id.shape[0]
+    hist = jnp.bincount(expert_id, length=num_experts)
+    start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(hist).astype(jnp.int32)]
+    )
+    dest = dispatch_ranks(
+        expert_id, start[:-1], num_experts=num_experts, rows=rows, interpret=interpret
+    )
+    grouped = jnp.zeros_like(tokens).at[dest].set(tokens, mode="promise_in_bounds")
+    return grouped, start, dest

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.classifier import classify as _tree_classify
+
+__all__ = [
+    "classify_histogram_ref",
+    "bitonic_sort_windows_ref",
+    "permute_blocks_ref",
+    "dispatch_ranks_ref",
+]
+
+
+def classify_histogram_ref(
+    keys: jax.Array, splitters: jax.Array, *, k: int, rows: int = 32
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle: tree-descent classifier + per-tile bincount."""
+    bucket = _tree_classify(keys, splitters, k)
+    tile = rows * 128
+    bt = bucket.reshape(-1, tile)
+    hist = jax.vmap(lambda r: jnp.bincount(r, length=2 * k))(bt)
+    return bucket, hist.astype(jnp.int32)
+
+
+def bitonic_sort_windows_ref(
+    bucket: jax.Array, keys: jax.Array, idx: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle: per-window stable lexicographic (bucket, key) sort."""
+
+    def one(b, k, v):
+        o1 = jnp.argsort(k, stable=True)
+        o2 = jnp.argsort(b[o1], stable=True)
+        o = o1[o2]
+        return b[o], k[o], v[o]
+
+    return jax.vmap(one)(bucket, keys, idx)
+
+
+def permute_blocks_ref(
+    a: jax.Array, block_bucket: jax.Array, *, k: int, block_elems: int
+) -> jax.Array:
+    """Oracle: stable block grouping by bucket (canonical representative of
+    the permutation's equivalence class; tests compare per-bucket block
+    multisets, not exact order)."""
+    nblocks = block_bucket.shape[0]
+    order = jnp.argsort(block_bucket, stable=True)
+    blocks = a.reshape(nblocks, block_elems)
+    return jnp.take(blocks, order, axis=0).reshape(-1)
+
+
+def dispatch_ranks_ref(expert_id: jax.Array, expert_start: jax.Array) -> jax.Array:
+    """Oracle: dest = start[e] + stable rank of token within its expert."""
+    n = expert_id.shape[0]
+    order = jnp.argsort(expert_id, stable=True)  # tokens grouped by expert
+    dest = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    # `dest` computed this way already equals start[e] + rank when starts are
+    # the exclusive histogram prefix (grouped positions are exactly that).
+    return dest
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """jnp oracle for kernels/flash_attention.py: q,k,v (B,H,S,hd)."""
+    import math as _math
+
+    b, h, s, hd = q.shape
+    sc = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / _math.sqrt(hd)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    valid = jnp.full((s, s), True)
+    if causal:
+        valid = kj <= qi
+    if window:
+        valid = valid & (kj > qi - window)
+    sc = jnp.where(valid[None, None], sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, length):
+    """jnp oracle for kernels/flash_decode.py: q (B,H,1,hd), cache (B,H,T,hd)."""
+    import math as _math
+
+    b, h, _, hd = q.shape
+    t = k.shape[2]
+    sc = jnp.einsum("bhqd,bhtd->bhqt", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / _math.sqrt(hd)
+    mask = (jnp.arange(t)[None, :] < length[:, None])[:, None, None, :]
+    sc = jnp.where(mask, sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqt,bhtd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)

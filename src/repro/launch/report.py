@@ -1,0 +1,85 @@
+"""Aggregate dry-run JSON rows into the EXPERIMENTS.md §Roofline table.
+
+  PYTHONPATH=src python -m repro.launch.report results/dryrun [--md]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirname: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        d = json.load(open(f))
+        d["_file"] = os.path.basename(f)
+        rows.append(d)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def table(rows, md=False):
+    hdr = ["arch", "shape", "mesh", "t_comp", "t_mem", "t_mem_min", "t_coll",
+           "bott(min)", "useful", "peakGB", "frac"]
+    out = []
+    for d in rows:
+        if d.get("status") == "skipped":
+            out.append([d["arch"], d["shape"], d.get("mesh", ""), "skip:full-attn",
+                        "", "", "", "", "", "", ""])
+            continue
+        if d.get("status") != "ok":
+            out.append([d["arch"], d["shape"], d.get("mesh", ""),
+                        "ERROR", "", "", "", "", "", "", ""])
+            continue
+        r = d["roofline"]
+        tc, tm, tmm, tx = (r["t_compute"], r["t_memory"],
+                           r.get("t_memory_min", 0.0), r["t_collective"])
+        peak = (d.get("memory", {}).get("peak_memory_in_bytes")
+                or d.get("memory", {}).get("argument_size_in_bytes", 0))
+        # roofline fraction: useful-compute time over the modelled step time
+        # (optimistic memory model; the honest "how close to roofline" score)
+        model_t = r["model_flops"] / r["chips"] / 197e12
+        frac = model_t / max(tc, tmm, tx) if max(tc, tmm, tx) else 0.0
+        out.append([
+            d["arch"], d["shape"], d["mesh"], fmt_s(tc), fmt_s(tm), fmt_s(tmm),
+            fmt_s(tx), r.get("bottleneck_min", r["bottleneck"]),
+            f"{r['useful_ratio']:.2f}", f"{peak / 2**30:.1f}",
+            f"{frac:.3f}",
+        ])
+    w = [max(len(str(r[i])) for r in [hdr] + out) for i in range(len(hdr))]
+    sep = " | " if md else "  "
+    lines = [sep.join(str(h).ljust(w[i]) for i, h in enumerate(hdr))]
+    if md:
+        lines.insert(0, "| " + lines[0] + " |")
+        lines[0] = lines.pop(0)
+        lines.append("|" + "|".join("-" * (x + 2) for x in w) + "|")
+        lines[0], lines[1] = lines[0], lines[1]
+    for r in out:
+        line = sep.join(str(c).ljust(w[i]) for i, c in enumerate(r))
+        lines.append(("| " + line + " |") if md else line)
+    if md:
+        lines[0] = "| " + sep.join(str(h).ljust(w[i]) for i, h in enumerate(hdr)) + " |"
+    return "\n".join(lines)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    md = "--md" in sys.argv
+    rows = load(d)
+    pods = {}
+    for r in rows:
+        pods.setdefault("2pod" if "2pod" in r["_file"] else "1pod", []).append(r)
+    for pod, rs in sorted(pods.items()):
+        print(f"\n=== {pod} ===")
+        print(table(rs, md=md))
+
+
+if __name__ == "__main__":
+    main()

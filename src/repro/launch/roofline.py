@@ -1,0 +1,219 @@
+"""Roofline-term extraction from a compiled (unexecuted) XLA artifact.
+
+Three terms per (arch x shape x mesh) cell, TPU v5e constants:
+
+  compute    = HLO_FLOPs_global    / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes_global    / (chips * 819e9 B/s HBM)
+  collective = collective_bytes    / (chips * 4 * 50e9 B/s ICI links)
+
+``cost_analysis()`` reports the PER-DEVICE partitioned module (SPMD = one
+program per device), so globals are per-device * chips and the chip count
+cancels; we keep both forms for the table.  Collective bytes are NOT in
+cost_analysis — we parse the optimized HLO and sum, for every
+all-gather/all-reduce/reduce-scatter/all-to-all/collective-permute, the
+bytes that cross the wire per device (receive-volume convention: result
+bytes for gather-like ops, operand bytes for reduce-scatter; all-reduce
+counts 2x operand (reduce-scatter + all-gather of a ring)).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "RooflineReport",
+           "model_flops"]
+
+# TPU v5e per chip
+HW = {
+    "peak_flops": 197e12,       # bf16
+    "hbm_bw": 819e9,            # B/s
+    "ici_bw": 50e9,             # B/s per link
+    "ici_links": 4,             # links/chip on a 2-D torus (16x16 pod)
+    "hbm_bytes": 16 * 2**30,    # capacity
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string, incl. tuples '(f32[..], bf16[..])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire bytes by collective kind, from optimized HLO text."""
+    out: Dict[str, int] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        result_shape, kind = m.group(1), m.group(2)
+        # async pairs: count the -start, skip the -done
+        if "-done(" in line:
+            continue
+        rb = _shape_bytes(result_shape)
+        # operand bytes: everything inside the call parens
+        inner = line[line.index("(") + 1 :]
+        ob = _shape_bytes(inner)
+        if kind == "all-reduce":
+            wire = 2 * ob          # ring RS+AG
+        elif kind == "reduce-scatter":
+            wire = ob
+        elif kind == "all-gather":
+            wire = rb
+        elif kind == "all-to-all":
+            wire = max(rb, ob)
+        else:  # collective-permute
+            wire = rb
+        out[kind] = out.get(kind, 0) + wire
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_breakdown: Dict[str, int]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float          # MODEL_FLOPS / global HLO flops
+    peak_mem_per_dev: Optional[float] = None
+    note: str = ""
+    raw_flops_per_dev: float = 0.0   # cost_analysis() as reported (loops x1)
+    raw_bytes_per_dev: float = 0.0
+    n_while: int = 0
+    loop_trips: Dict[str, int] = field(default_factory=dict)
+    bytes_min_per_dev: float = 0.0   # fusion-optimistic HBM traffic
+    t_memory_min: float = 0.0
+    bottleneck_min: str = ""         # bottleneck under optimistic memory
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self))
+
+
+def roofline_terms(
+    *, arch: str, shape: str, mesh_name: str, chips: int,
+    flops_per_dev: float, bytes_per_dev: float, hlo_text: str,
+    model_fl: float, peak_mem: Optional[float] = None, note: str = "",
+) -> RooflineReport:
+    """``flops_per_dev``/``bytes_per_dev`` are the RAW cost_analysis numbers
+    (loop bodies counted once — see launch/hlo_cost.py).  We re-derive
+    trip-count-corrected values from the HLO text and use THOSE for the
+    three terms; the raws are kept in the report for comparison."""
+    from repro.launch.hlo_cost import analyze_hlo
+
+    hc = analyze_hlo(hlo_text)
+    raw_flops, raw_bytes = flops_per_dev, bytes_per_dev
+    # corrected flops: never less than what XLA itself counted
+    flops_per_dev = max(hc.flops, raw_flops)
+    bytes_per_dev = max(hc.bytes, raw_bytes)
+    bytes_min = hc.bytes_min
+    coll = {k: int(v) for k, v in hc.coll.items()}
+    cb = float(sum(coll.values()))
+    t_c = flops_per_dev / HW["peak_flops"]
+    t_m = bytes_per_dev / HW["hbm_bw"]          # conservative (XLA convention)
+    t_m_min = bytes_min / HW["hbm_bw"]          # fusion-optimistic (TPU real)
+    t_x = cb / (HW["ici_links"] * HW["ici_bw"])
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bott = max(terms, key=terms.get)
+    # bottleneck under the TPU-realistic memory model (used by §Perf)
+    terms_min = {"compute": t_c, "memory": t_m_min, "collective": t_x}
+    bott_min = max(terms_min, key=terms_min.get)
+    global_flops = flops_per_dev * chips
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_dev=flops_per_dev, bytes_per_dev=bytes_per_dev,
+        coll_bytes_per_dev=cb, coll_breakdown=coll,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, bottleneck=bott,
+        model_flops=model_fl,
+        useful_ratio=(model_fl / global_flops) if global_flops else 0.0,
+        peak_mem_per_dev=peak_mem, note=note,
+        raw_flops_per_dev=raw_flops, raw_bytes_per_dev=raw_bytes,
+        n_while=hc.n_while, loop_trips=dict(hc.trips),
+        bytes_min_per_dev=bytes_min, t_memory_min=t_m_min,
+        bottleneck_min=bott_min,
+    )
+
+
+def _param_count(cfg) -> float:
+    """Total parameter count N (all experts counted; N_active separately)."""
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    hd = cfg.hd
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "ssm":  # rwkv6
+        tm = 5 * d * d + 2 * d * 64 + d  # r,k,v,g,o + lora
+        cm = d * cfg.d_ff * 2 + d * d
+        return L * (tm + cm) + emb
+    attn = d * (cfg.num_heads * hd) * 2 + d * (cfg.num_kv_heads * hd) * 2
+    if cfg.family == "moe":
+        m = cfg.moe
+        routed = m.num_experts * 3 * d * m.d_ff_expert
+        shared = (3 * d * m.d_ff_shared) if m.num_shared else 0
+        ffn = routed + shared + d * m.num_experts
+    else:
+        ffn = 3 * d * cfg.d_ff
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_in = s.expand * d
+        mamba = d * (2 * d_in + 2 * s.d_state + d_in // s.head_dim) + d_in * d
+        per = mamba + 3 * d * cfg.d_ff
+        groups = L // s.attn_every
+        return L * per + attn + emb  # ONE shared attn block
+    return L * (attn + ffn) + emb
+
+
+def _active_param_count(cfg) -> float:
+    if cfg.family != "moe":
+        return _param_count(cfg)
+    d, L = cfg.d_model, cfg.num_layers
+    m = cfg.moe
+    attn = d * (cfg.num_heads * cfg.hd) * 2 + d * (cfg.num_kv_heads * cfg.hd) * 2
+    act = m.top_k * 3 * d * m.d_ff_expert + (3 * d * m.d_ff_shared if m.num_shared else 0)
+    emb = cfg.vocab_size * d * 2
+    return L * (attn + act + d * m.num_experts) + emb
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed.
+    For decode shapes D = global_batch (one token per request);
+    train counts fwd+bwd (6ND), prefill/decode fwd only (2ND)."""
+    n_act = _active_param_count(cfg)
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * toks
+    return 2.0 * n_act * shape.global_batch

@@ -1,0 +1,215 @@
+"""PartitionSpec rules: the TP/FSDP/EP contract for every architecture.
+
+One rule table maps parameter tree paths to logical shardings on the
+(pod, data, model) production mesh:
+
+  * **TP** (``model`` axis): attention heads / FFN hidden / vocab are
+    column-sharded on their "parallel" matrices (wq/wk/wv, gate/up,
+    lm_head, embed) and row-sharded on the reducing ones (wo, down) — the
+    Megatron pairing, one reduce per block;
+  * **FSDP/ZeRO** (``data`` (+``pod``) axes): the non-TP dim of every large
+    matrix is additionally sharded over the dp axes; optimizer moments are
+    elementwise so they inherit it (ZeRO-3 by construction);
+  * **EP**: expert tensors (E, ..) shard E over ``model`` — dispatch becomes
+    the all-to-all pair, the distributed instantiation of the paper's block
+    permutation;
+  * small vectors/scalars are replicated.
+
+``strategy`` switches let the §Perf hillclimb swap regimes per cell (e.g.
+pure-TP params for decode, sequence-sharded KV for long contexts) without
+touching model code.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import dp_axes
+
+__all__ = ["ShardingStrategy", "param_specs", "batch_specs", "cache_specs",
+           "named", "logits_spec"]
+
+
+@dataclass(frozen=True)
+class ShardingStrategy:
+    """Tunable regime knobs (hillclimbed in EXPERIMENTS.md §Perf)."""
+    fsdp_params: bool = True       # shard params over dp axes (ZeRO-3)
+    seq_shard_cache: Optional[bool] = None  # None: auto by kv-head divisibility
+    shard_moe_router: bool = False
+    embed_vocab_axis: str = "model"  # "model" | "none"
+
+
+def _dp(mesh: Mesh) -> Tuple[str, ...]:
+    return dp_axes(mesh)
+
+
+def _tp_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _rule(pstr: str, shape, cfg: ModelConfig, mesh: Mesh,
+          strat: ShardingStrategy) -> P:
+    dp = _dp(mesh) if strat.fsdp_params else None
+    tp = "model"
+    nd = len(shape)
+    stacked = pstr.startswith("layers/")
+    lead = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+
+    def spec(*axes):
+        return P(*(lead + axes))
+
+    leaf = pstr.split("/")[-1]
+    parent = pstr.split("/")[-2] if "/" in pstr else ""
+
+    # ---- embeddings / head -------------------------------------------------
+    if pstr == "embed":
+        va = tp if strat.embed_vocab_axis == "model" else None
+        return P(va, dp)
+    if parent == "lm_head" and leaf in ("w",):
+        return P(dp, tp)
+
+    # ---- MoE expert banks (E, din, dout) -----------------------------------
+    if "experts" in pstr and len(core) == 3:
+        if leaf in ("gate", "up"):
+            return spec(tp, dp, None)
+        return spec(tp, None, dp)  # down
+    if "router" in pstr:
+        return spec(dp, None) if strat.shard_moe_router else spec(None, None)
+
+    # ---- attention ----------------------------------------------------------
+    if parent in ("wq", "wk", "wv") and leaf == "w":
+        # column-parallel; kv projections with few heads still shard evenly
+        # because the column dim is kv_heads*head_dim (GSPMD pads if uneven)
+        return spec(dp, tp)
+    if parent in ("wq", "wk", "wv") and leaf == "b":
+        return spec(tp)
+    if parent == "wo" and leaf == "w":
+        return spec(tp, dp)
+
+    # ---- dense / shared-expert MLPs ----------------------------------------
+    if parent in ("gate", "up") and leaf == "w":
+        return spec(dp, tp)
+    if parent == "down" and leaf == "w":
+        return spec(tp, dp)
+    if leaf == "b":
+        return spec(None)
+
+    # ---- mamba2 -------------------------------------------------------------
+    if parent == "in_proj" and leaf == "w":
+        return spec(dp, tp)
+    if parent == "out_proj" and leaf == "w":
+        return spec(tp, dp)
+    if leaf == "conv_w":
+        return spec(None, tp)
+    if leaf in ("conv_b", "norm_z"):
+        return spec(tp)
+
+    # ---- rwkv6 --------------------------------------------------------------
+    if parent in ("wr", "wk", "wv", "wg") and leaf == "w":
+        return spec(dp, tp)
+    if parent == "wo" and leaf == "w":
+        return spec(tp, dp)
+    if parent in ("w_lora_a",) and leaf == "w":
+        return spec(dp, None)
+    if parent in ("w_lora_b",) and leaf == "w":
+        return spec(None, tp)
+    if leaf == "mu":
+        return spec(None, tp)
+
+    # ---- everything else (norm scales, per-head vectors, scalars) ----------
+    return spec(*([None] * len(core)))
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh,
+                strat: ShardingStrategy = ShardingStrategy()) -> Any:
+    """Pytree of PartitionSpec congruent to ``params`` (works on
+    ShapeDtypeStructs too)."""
+
+    def f(path, leaf):
+        return _rule(_path_str(path), leaf.shape, cfg, mesh, strat)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def _dp_for(mesh: Mesh, size: int):
+    """dp axes if they divide ``size`` evenly, else the largest prefix that
+    does (a batch of 1 — long_500k — simply replicates)."""
+    axes = []
+    prod = 1
+    for a in _dp(mesh):
+        if size % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes) if axes else None
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: Any) -> Any:
+    def f(path, leaf):
+        nd = len(leaf.shape)
+        dp = _dp_for(mesh, leaf.shape[0])
+        if nd >= 3:  # embeds (B,S,D)
+            return P(dp, None, None)
+        return P(*( (dp,) + (None,) * (nd - 1) ))
+
+    return jax.tree_util.tree_map_with_path(f, batch)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache: Any,
+                strat: ShardingStrategy = ShardingStrategy()) -> Any:
+    """Decode-cache shardings.  Leaves are stacked: leading dim = layers.
+
+    KV tensors (L,B,T,KVH,hd): kv-heads over ``model`` when divisible,
+    else the cache SEQUENCE dim is sharded over ``model`` (flash-decoding
+    style) — that is what lets a 32k x 128-request cache of an 8-kv-head
+    model fit.
+    """
+    tp_n = _tp_size(mesh)
+
+    def f(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        leafname = pstr.split("/")[-1]
+        dp = _dp_for(mesh, shape[1]) if len(shape) >= 2 else None
+        if leafname in ("k", "v") and len(shape) == 5:
+            kvh = shape[3]
+            seq_shard = strat.seq_shard_cache
+            if seq_shard is None:
+                seq_shard = kvh % tp_n != 0
+            if seq_shard:
+                return P(None, dp, "model", None, None)
+            return P(None, dp, None, "model", None)
+        if leafname == "pos":
+            return P(*([None] * len(shape)))
+        if leafname == "wkv" and len(shape) == 5:  # (L,B,h,hd,hd)
+            h = shape[2]
+            if h % tp_n == 0:
+                return P(None, dp, "model", None, None)
+            return P(None, dp, None, None, None)
+        if leafname == "ssm" and len(shape) == 5:  # (L,B,nh,hd,N)
+            return P(None, dp, None, None, None)
+        if leafname == "conv" and len(shape) == 4:  # (L,B,dc-1,d_in)
+            return P(None, dp, None, "model")
+        if len(shape) >= 2:  # shifts (L,B,D) etc.
+            return P(*((None, dp) + (None,) * (len(shape) - 2)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(_dp(mesh), None, "model")
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

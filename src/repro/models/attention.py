@@ -1,0 +1,275 @@
+"""Grouped-query attention with KV cache, RoPE, and sliding-window support.
+
+Pure-functional: ``init_attention`` builds a param pytree, ``attention``
+applies it.  Three entry modes, all jit/pjit-friendly:
+
+  * training / prefill: full (B, S) sequence, causal mask, returns the new
+    KV cache when ``cache`` is a fresh one (prefill) or None (training);
+  * decode: S == 1 with a ring-buffer or linear KV cache written at
+    ``cache["pos"]``;
+  * sliding window (``window > 0``): the causal mask is additionally banded;
+    the decode cache is a ring buffer of ``window`` slots (used by the
+    hybrid arch for the 500k-token long-context shape).
+
+Sharding notes (the TP contract, see launch/shardings.py): wq/wk/wv are
+column-sharded over the ``model`` axis (head dim), wo row-sharded; the cache
+is sharded over batch (dp) and kv-heads (model) when divisible, else over
+sequence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DP, dense, init_dense, rope, shard_hint
+from repro.models.policy import current_policy
+
+__all__ = ["init_attention", "attention", "init_cache", "AttnCache"]
+
+Params = Dict[str, Any]
+AttnCache = Dict[str, Any]
+
+
+def init_attention(
+    key,
+    d_model: int,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    *,
+    bias: bool = False,
+    dtype=jnp.bfloat16,
+) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d_model, num_heads * head_dim, bias=bias, dtype=dtype),
+        "wk": init_dense(kk, d_model, num_kv_heads * head_dim, bias=bias, dtype=dtype),
+        "wv": init_dense(kv, d_model, num_kv_heads * head_dim, bias=bias, dtype=dtype),
+        "wo": init_dense(ko, num_heads * head_dim, d_model, dtype=dtype),
+    }
+
+
+def init_cache(
+    batch: int,
+    seq: int,
+    num_kv_heads: int,
+    head_dim: int,
+    *,
+    window: int = 0,
+    dtype=jnp.bfloat16,
+) -> AttnCache:
+    """Decode cache.  ``seq`` is the maximum context; with a window the
+    buffer is a ring of ``min(window, seq)`` slots."""
+    slots = min(window, seq) if window else seq
+    return {
+        "k": jnp.zeros((batch, slots, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, slots, num_kv_heads, head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _sdpa(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, T, KVH, hd)
+    v: jax.Array,  # (B, T, KVH, hd)
+    mask: Optional[jax.Array],  # broadcastable to (B, H, S, T) or None
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, s, kvh, group, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * (1.0 / math.sqrt(hd))
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h * hd)
+
+
+def _expand_kv(k: jax.Array, group: int) -> jax.Array:
+    """(B,T,KVH,hd) -> (B,T,KVH*group,hd) — a broadcast, so per-device only
+    the local head shard materializes under the flash head sharding."""
+    if group == 1:
+        return k
+    b, t, kvh, hd = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, t, kvh, group, hd)
+    ).reshape(b, t, kvh * group, hd)
+
+
+def _sdpa_flash(
+    q: jax.Array,        # (B, S, H, hd)
+    k: jax.Array,        # (B, T, KVH, hd)
+    v: jax.Array,        # (B, T, KVH, hd)
+    q_offset,            # scalar: absolute position of query row 0
+    window: int,
+    block: int,
+) -> jax.Array:
+    """KV-chunked online-softmax attention (flash style, §Perf).
+
+    Never materializes the (S, T) score matrix: a ``lax.scan`` over KV
+    chunks carries the running (max, denominator, accumulator).  Explicit
+    head sharding over the ``model`` axis keeps every chunk einsum local to
+    a device (GSPMD pads when H doesn't divide TP), and GQA KV heads are
+    broadcast to full heads so q/k/v shard congruently — the whole-layer
+    collective cost of attention drops to the (tiny) KV all-gather.
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    k = _expand_kv(k, h // kvh)
+    v = _expand_kv(v, h // kvh)
+    q = shard_hint(q, DP, None, "model", None)
+    k = shard_hint(k, DP, None, "model", None)
+    v = shard_hint(v, DP, None, "model", None)
+
+    t = k.shape[1]
+    nb = -(-t // block)
+    pad = nb * block - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nb, block, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nb, block, h, hd).transpose(1, 0, 2, 3, 4)
+
+    scale = 1.0 / math.sqrt(hd)
+    qi = jnp.arange(s)[:, None] + q_offset            # absolute query pos
+    qf = q.astype(jnp.float32) * scale
+
+    def body(carry, chunk):
+        m, l, acc, t0 = carry
+        kb, vb = chunk                                 # (B, block, H, hd)
+        sc = jnp.einsum("bshd,bthd->bhst", qf, kb.astype(jnp.float32))
+        kj = t0 + jnp.arange(block)[None, :]           # (1, block)
+        valid = kj <= qi                               # causal
+        if window:
+            valid = valid & (kj > qi - window)
+        valid = valid & (kj[0] < t)[None, :]           # kv padding
+        sc = jnp.where(valid[None, None], sc, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        # fully-masked-so-far rows: keep exp() finite
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(sc - m_safe[..., None])
+        p = jnp.where(valid[None, None], p, 0.0)
+        corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new, t0 + block), None
+
+    m0 = jnp.full((b, h, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, hd), jnp.float32)
+    a0 = shard_hint(a0, DP, "model", None, None)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.int32(0)), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3).astype(q.dtype)    # (B, S, H, hd)
+    return out.reshape(b, s, h * hd)
+
+
+def _causal_mask(s: int, t: int, offset, window: int) -> jax.Array:
+    """(1, 1, s, t) boolean mask; query i attends key j iff
+    j <= i + offset and (no window or j > i + offset - window)."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window:
+        m = m & (kj > qi - window)
+    return m[None, None]
+
+
+def attention(
+    p: Params,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (B, S)
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: int = 0,
+    cache: Optional[AttnCache] = None,
+    update_cache: bool = False,
+) -> Tuple[jax.Array, Optional[AttnCache]]:
+    """Apply attention.
+
+    training:       cache=None, update_cache=False
+    prefill:        cache=fresh, update_cache=True  (writes positions 0..S)
+    decode (S==1):  cache=live,  update_cache=True  (writes at cache['pos'])
+    """
+    b, s, _ = x.shape
+    q = dense(p["wq"], x).reshape(b, s, num_heads, head_dim)
+    k = dense(p["wk"], x).reshape(b, s, num_kv_heads, head_dim)
+    v = dense(p["wv"], x).reshape(b, s, num_kv_heads, head_dim)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+
+    fb = current_policy().flash_block
+    use_flash = fb > 0 and s > 1 and s >= fb
+
+    if cache is None:
+        if use_flash:
+            out = _sdpa_flash(q, k, v, 0, window, fb)
+        else:
+            mask = _causal_mask(s, s, 0, window)
+            out = _sdpa(q, k, v, mask)
+        return dense(p["wo"], out), None
+
+    slots = cache["k"].shape[1]
+    pos = cache["pos"]
+    if s == 1:
+        # Decode: write one entry (ring-buffer slot when windowed).
+        slot = jnp.where(jnp.int32(window) > 0, pos % slots, jnp.minimum(pos, slots - 1))
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        if current_policy().flash_decode and not window:
+            # Pallas fused decode (§Perf): one VMEM pass over the cache.
+            from repro.kernels.flash_decode import flash_decode
+
+            group = num_heads // num_kv_heads
+            kx = _expand_kv(ck, group).transpose(0, 2, 1, 3)  # (B,H,T,hd)
+            vx = _expand_kv(cv, group).transpose(0, 2, 1, 3)
+            qx = q.transpose(0, 2, 1, 3)                      # (B,H,1,hd)
+            length = jnp.broadcast_to(pos + 1, (b,))
+            interp = jax.default_backend() != "tpu"
+            o = flash_decode(qx, kx, vx, length, interpret=interp)
+            out = o.transpose(0, 2, 1, 3).reshape(b, 1, num_heads * head_dim)
+            new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+            return dense(p["wo"], out), new_cache
+        # Valid keys: absolute index of ring slot j is recoverable because we
+        # only need "is it within the causal window", not its exact position
+        # for RoPE (keys were rotated at write time).
+        j = jnp.arange(slots)
+        if window:
+            age = (slot - j) % slots  # 0 = just written
+            valid = (age <= jnp.minimum(pos, window - 1))
+        else:
+            valid = j <= pos
+        mask = valid[None, None, None, :]
+        out = _sdpa(q, ck, cv, mask)
+        new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+        return dense(p["wo"], out), new_cache
+
+    # Prefill: write the whole (possibly window-truncated) sequence.
+    if use_flash:
+        out = _sdpa_flash(q, k, v, 0, window, fb)
+    else:
+        mask = _causal_mask(s, s, 0, window)
+        out = _sdpa(q, k, v, mask)
+    if window and slots < s:
+        # Keep the last ``slots`` keys, aligned so that ring slot
+        # (i % slots) holds absolute position i for i in [s-slots, s).
+        tail_k, tail_v = k[:, -slots:], v[:, -slots:]
+        roll = (-(s - slots)) % slots
+        ck = jnp.roll(tail_k, shift=-roll, axis=1)
+        cv = jnp.roll(tail_v, shift=-roll, axis=1)
+    else:
+        pad = slots - s
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    new_cache = {"k": ck, "v": cv, "pos": jnp.asarray(s, jnp.int32)}
+    return dense(p["wo"], out), new_cache

@@ -1,0 +1,54 @@
+"""Trace-time compute policy: the §Perf hillclimb knobs.
+
+The policy is ambient (a module-level stack, captured at trace time inside
+``jax.jit``), so the launcher / dry-run can flip optimization regimes
+without threading arguments through every model signature:
+
+  * ``flash_block``: 0 = eager full-score SDPA (the baseline; materializes
+    (B,H,S,T) scores); >0 = KV-chunked online-softmax attention (flash
+    style) with explicit head sharding — never materializes the score
+    matrix, removes the head_dim-contraction all-reduce GSPMD picks when
+    heads don't divide the TP axis.
+  * ``explicit_ep``: False = scatter/gather MoE dispatch into a globally
+    sharded (E, cap, d) buffer (baseline; GSPMD lowers the scatter to
+    all-reduces of the whole buffer); True = shard_map expert parallelism:
+    every model-axis column selects tokens for its local experts from the
+    (TP-replicated) activations, computes, and the per-token combine rides
+    the existing Megatron psum.
+
+Used with::
+
+    with compute_policy(flash_block=1024, explicit_ep=True):
+        lowered = step.lower(...)
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass, replace
+from typing import Iterator, List
+
+__all__ = ["ComputePolicy", "compute_policy", "current_policy"]
+
+
+@dataclass(frozen=True)
+class ComputePolicy:
+    flash_block: int = 0
+    explicit_ep: bool = False
+    flash_decode: bool = False   # Pallas fused decode kernel (linear cache)
+
+
+_STACK: List[ComputePolicy] = [ComputePolicy()]
+
+
+def current_policy() -> ComputePolicy:
+    return _STACK[-1]
+
+
+@contextmanager
+def compute_policy(**kw) -> Iterator[ComputePolicy]:
+    pol = replace(_STACK[-1], **kw)
+    _STACK.append(pol)
+    try:
+        yield pol
+    finally:
+        _STACK.pop()

@@ -1,0 +1,160 @@
+"""RWKV-6 "Finch" mixer: time-mix with data-dependent decay + channel-mix.
+
+Attention-free: the per-head state is a (hd, hd) outer-product accumulator
+with a *data-dependent* per-channel decay w_t (the Finch contribution over
+RWKV-5's static decay).  Training/prefill runs a chunked ``lax.scan`` over
+the sequence (O(S) time, O(1) state — sub-quadratic, so rwkv6 runs the
+500k-token shape); decode is a single recurrence step.
+
+Simplifications vs. the reference CUDA implementation, noted per DESIGN.md:
+the low-rank "token-shift lerp" LoRA uses one shared rank per projection and
+the decay LoRA feeds ``exp(-exp(.))`` exactly as upstream.  Shapes and
+parameter counts match rwkv6-1.6b at the assigned config.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense
+
+__all__ = ["init_rwkv6", "rwkv6_timemix", "rwkv6_channelmix", "init_rwkv_state"]
+
+Params = Dict[str, Any]
+
+
+def init_rwkv6(
+    key, d_model: int, *, head_dim: int, d_ff: int, lora: int = 64,
+    dtype=jnp.bfloat16,
+) -> Params:
+    h = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    tm = {
+        "mu": jnp.full((5, d_model), 0.5, dtype),  # shift-lerp for r,k,v,w,g
+        "wr": init_dense(ks[0], d_model, d_model, dtype=dtype),
+        "wk": init_dense(ks[1], d_model, d_model, dtype=dtype),
+        "wv": init_dense(ks[2], d_model, d_model, dtype=dtype),
+        "wg": init_dense(ks[3], d_model, d_model, dtype=dtype),
+        "wo": init_dense(ks[4], d_model, d_model, dtype=dtype),
+        "w_lora_a": init_dense(ks[5], d_model, lora, dtype=dtype),
+        "w_lora_b": init_dense(ks[6], lora, d_model, dtype=dtype),
+        "w_bias": jnp.full((d_model,), -2.0, jnp.float32),
+        "bonus": (jax.random.normal(ks[7], (h, head_dim), jnp.float32) * 0.1),
+        "ln_x": jnp.ones((d_model,), jnp.float32),
+    }
+    cm = {
+        "mu": jnp.full((2, d_model), 0.5, dtype),  # shift-lerp for k,r
+        "wk": init_dense(ks[8], d_model, d_ff, dtype=dtype),
+        "wv": init_dense(ks[9], d_ff, d_model, dtype=dtype),
+        "wr": init_dense(ks[10], d_model, d_model, dtype=dtype),
+    }
+    return {"tm": tm, "cm": cm}
+
+
+def init_rwkv_state(batch: int, d_model: int, *, head_dim: int, dtype=jnp.float32):
+    h = d_model // head_dim
+    return {
+        "tm_shift": jnp.zeros((batch, d_model), jnp.bfloat16),
+        "cm_shift": jnp.zeros((batch, d_model), jnp.bfloat16),
+        "wkv": jnp.zeros((batch, h, head_dim, head_dim), dtype),
+    }
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} along seq; position 0 gets ``prev`` (or zeros)."""
+    b, s, d = x.shape
+    first = prev[:, None, :].astype(x.dtype) if prev is not None else jnp.zeros(
+        (b, 1, d), x.dtype
+    )
+    return jnp.concatenate([first, x[:, :-1, :]], axis=1)
+
+
+def rwkv6_timemix(
+    p: Params,
+    x: jax.Array,  # (B,S,D)
+    *,
+    head_dim: int,
+    state: Optional[Dict[str, jax.Array]] = None,
+    update_state: bool = False,
+):
+    tm = p["tm"]
+    b, s, d = x.shape
+    h = d // head_dim
+    prev = state["tm_shift"] if state is not None else None
+    xp = _shift(x, prev)
+    mu = tm["mu"].astype(x.dtype)
+    lerp = lambda i: x + (xp - x) * mu[i][None, None, :]
+    r = dense(tm["wr"], lerp(0)).reshape(b, s, h, head_dim)
+    k = dense(tm["wk"], lerp(1)).reshape(b, s, h, head_dim)
+    v = dense(tm["wv"], lerp(2)).reshape(b, s, h, head_dim)
+    # data-dependent decay (Finch): w = exp(-exp(bias + lora(x_lerped)))
+    wlog = dense(tm["w_lora_b"], jnp.tanh(dense(tm["w_lora_a"], lerp(3))))
+    wlog = tm["w_bias"][None, None, :] + wlog.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog)).reshape(b, s, h, head_dim)  # in (0,1)
+    g = jax.nn.silu(dense(tm["wg"], lerp(4)))
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u = tm["bonus"][None, :, :]  # (1,h,hd)
+
+    st0 = (
+        state["wkv"] if state is not None
+        else jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    )
+
+    if s == 1 and state is not None:
+        kt, vt, rt, wt = kf[:, 0], vf[:, 0], rf[:, 0], w[:, 0]
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt, st0 + u[..., None] * kv)
+        stF = st0 * wt[..., None] + kv
+        out = y[:, None]  # (B,1,h,hd)
+    else:
+        def step(st, inp):
+            kt, vt, rt, wt = inp  # (b,h,hd) each
+            kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+            y = jnp.einsum("bhi,bhij->bhj", rt, st + u[..., None] * kv)
+            st = st * wt[..., None] + kv
+            return st, y
+
+        seq_first = lambda a: jnp.moveaxis(a, 1, 0)
+        stF, ys = jax.lax.scan(step, st0, (seq_first(kf), seq_first(vf),
+                                           seq_first(rf), seq_first(w)))
+        out = jnp.moveaxis(ys, 0, 1)  # (B,S,h,hd)
+
+    # group-norm per head then output gate/proj
+    of = out.reshape(b, s, h, head_dim)
+    mean = jnp.mean(of, axis=-1, keepdims=True)
+    var = jnp.var(of, axis=-1, keepdims=True)
+    of = (of - mean) * jax.lax.rsqrt(var + 64e-5)
+    of = of.reshape(b, s, d) * p["tm"]["ln_x"][None, None, :]
+    y = dense(tm["wo"], (of.astype(x.dtype) * g))
+
+    if not update_state:
+        return y, None
+    new_state = {"tm_shift": x[:, -1, :].astype(jnp.bfloat16), "wkv": stF}
+    return y, new_state
+
+
+def rwkv6_channelmix(
+    p: Params,
+    x: jax.Array,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,
+    update_state: bool = False,
+):
+    cm = p["cm"]
+    prev = state["cm_shift"] if state is not None else None
+    xp = _shift(x, prev)
+    mu = cm["mu"].astype(x.dtype)
+    xk = x + (xp - x) * mu[0][None, None, :]
+    xr = x + (xp - x) * mu[1][None, None, :]
+    k = jnp.square(jax.nn.relu(dense(cm["wk"], xk)))
+    kv = dense(cm["wv"], k)
+    y = jax.nn.sigmoid(dense(cm["wr"], xr)) * kv
+    if not update_state:
+        return y, None
+    return y, {"cm_shift": x[:, -1, :].astype(jnp.bfloat16)}

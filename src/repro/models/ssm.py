@@ -1,0 +1,206 @@
+"""Mamba2 (SSD — state-space duality) mixer, chunked-scan formulation.
+
+Implements the Mamba2 block of zamba2: input projection to (x, z, B, C, dt),
+short causal conv on x, selective state-space recurrence with scalar-per-head
+decay A, gated output.  Training/prefill uses the chunked ("block-diagonal +
+low-rank") algorithm: within a chunk the quadratic form, across chunks a
+``lax.scan`` carrying the (H, hd, N) state — O(S·c) work, sub-quadratic in S,
+which is what qualifies the hybrid arch for the 500k-token shape.
+
+Decode keeps a conv ring (B, d_conv-1, d_in) and the SSM state
+(B, H, hd, N); one token is O(1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense
+
+__all__ = ["init_mamba2", "mamba2", "init_ssm_state"]
+
+Params = Dict[str, Any]
+
+
+def init_mamba2(
+    key,
+    d_model: int,
+    *,
+    d_state: int,
+    d_conv: int,
+    expand: int,
+    head_dim: int,
+    dtype=jnp.bfloat16,
+) -> Params:
+    d_in = expand * d_model
+    nheads = d_in // head_dim
+    k1, k2, k3 = jax.random.split(key, 3)
+    # in_proj packs [x, z, B, C, dt] like the reference implementation.
+    d_proj = 2 * d_in + 2 * d_state + nheads
+    return {
+        "in_proj": init_dense(k1, d_model, d_proj, dtype=dtype),
+        "conv_w": (
+            jax.random.normal(k2, (d_conv, d_in), jnp.float32) / math.sqrt(d_conv)
+        ).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "A_log": jnp.zeros((nheads,), jnp.float32),  # A = -exp(A_log) in (-inf,0)
+        "dt_bias": jnp.full((nheads,), math.log(math.e - 1), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm_z": jnp.ones((d_in,), dtype),
+        "out_proj": init_dense(k3, d_in, d_model, dtype=dtype),
+    }
+
+
+def init_ssm_state(
+    batch: int, d_model: int, *, d_state: int, d_conv: int, expand: int,
+    head_dim: int, dtype=jnp.float32,
+) -> Dict[str, jax.Array]:
+    d_in = expand * d_model
+    nheads = d_in // head_dim
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_in), dtype=jnp.bfloat16),
+        "ssm": jnp.zeros((batch, nheads, head_dim, d_state), dtype),
+    }
+
+
+def _split_proj(p: Params, x: jax.Array, d_in: int, d_state: int, nheads: int):
+    proj = dense(p["in_proj"], x)
+    xz, rest = proj[..., : 2 * d_in], proj[..., 2 * d_in :]
+    xs, z = xz[..., :d_in], xz[..., d_in:]
+    B = rest[..., :d_state]
+    C = rest[..., d_state : 2 * d_state]
+    dt = rest[..., 2 * d_state :]
+    return xs, z, B, C, dt
+
+
+def _conv1d(p: Params, xs: jax.Array, conv_state: Optional[jax.Array]):
+    """Short causal depthwise conv.  xs (B,S,d_in)."""
+    d_conv = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xs.shape[0], d_conv - 1, xs.shape[-1]), xs.dtype)
+    else:
+        pad = conv_state.astype(xs.dtype)
+    xp = jnp.concatenate([pad, xs], axis=1)  # (B, S+dc-1, d_in)
+    out = sum(
+        xp[:, i : i + xs.shape[1], :] * p["conv_w"][i][None, None, :]
+        for i in range(d_conv)
+    )
+    new_state = xp[:, -(d_conv - 1) :, :] if d_conv > 1 else pad[:, :0]
+    return jax.nn.silu(out + p["conv_b"]), new_state
+
+
+def _ssd_chunked(
+    xh: jax.Array,   # (B, S, H, hd)
+    dt: jax.Array,   # (B, S, H) softplus'd, fp32
+    A: jax.Array,    # (H,) negative, fp32
+    B_: jax.Array,   # (B, S, N)
+    C_: jax.Array,   # (B, S, N)
+    state0: jax.Array,  # (B, H, hd, N) fp32
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,H,hd), final state)."""
+    b, s, h, hd = xh.shape
+    n = B_.shape[-1]
+    nc = s // chunk
+    # reshape into chunks
+    xc = xh.reshape(b, nc, chunk, h, hd).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B_.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C_.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    logd = dtc * A[None, None, None, :]          # (b,nc,c,h) log decay per step
+    cum = jnp.cumsum(logd, axis=2)               # inclusive
+    # intra-chunk quadratic term: y_i += C_i . sum_{j<=i} exp(cum_i-cum_j) dt_j B_j x_j
+    li = cum[:, :, :, None, :]                   # (b,nc,c,1,h)
+    lj = cum[:, :, None, :, :]                   # (b,nc,1,c,h)
+    gate = jnp.exp(li - lj)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    gate = jnp.where(causal, gate, 0.0)
+    cb = jnp.einsum("bzin,bzjn->bzij", Cc, Bc)   # (b,nc,c,c)
+    w = cb[..., None] * gate                     # (b,nc,c,c,h)
+    xdt = xc * dtc[..., None]                    # (b,nc,c,h,hd)
+    y_intra = jnp.einsum("bzijh,bzjhd->bzihd", w, xdt)
+
+    # per-chunk state contribution: S_z = sum_j exp(cum_end - cum_j) dt_j x_j B_j^T
+    g_end = jnp.exp(cum[:, :, -1:, :] - cum)     # (b,nc,c,h)
+    dS = jnp.einsum("bzch,bzchd,bzcn->bzhdn", g_end, xc * dtc[..., None], Bc)
+    decay_chunk = jnp.exp(cum[:, :, -1, :])      # (b,nc,h) total chunk decay
+
+    def step(st, inp):
+        dS_z, dec_z, C_z, gin_z = inp
+        # inter-chunk output for this chunk uses the INCOMING state
+        y = jnp.einsum("bcn,bhdn,bch->bchd", C_z, st, gin_z)
+        st = st * dec_z[:, :, None, None] + dS_z
+        return st, y
+
+    g_in = jnp.exp(cum)                          # decay from chunk start to i
+    xs_scan = (
+        jnp.moveaxis(dS, 1, 0),
+        jnp.moveaxis(decay_chunk, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+        jnp.moveaxis(g_in, 1, 0),
+    )
+    stateF, y_inter = jax.lax.scan(step, state0, xs_scan)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)        # (b,nc,c,h,hd)
+    y = (y_intra + y_inter).reshape(b, s, h, hd)
+    return y, stateF
+
+
+def mamba2(
+    p: Params,
+    x: jax.Array,  # (B, S, D)
+    *,
+    d_state: int,
+    expand: int,
+    head_dim: int,
+    chunk: int = 128,
+    state: Optional[Dict[str, jax.Array]] = None,
+    update_state: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, d_model = x.shape
+    d_in = expand * d_model
+    nheads = d_in // head_dim
+    xs, z, B_, C_, dt = _split_proj(p, x, d_in, d_state, nheads)
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _conv1d(p, xs, conv_state)
+
+    A = -jnp.exp(p["A_log"])
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    xh = xs.reshape(b, s, nheads, head_dim)
+    state0 = (
+        state["ssm"] if state is not None
+        else jnp.zeros((b, nheads, head_dim, d_state), jnp.float32)
+    )
+
+    if s == 1 and state is not None:
+        # decode: one recurrence step, closed form
+        dA = jnp.exp(dtp[:, 0, :] * A[None, :])            # (B,H)
+        dBx = jnp.einsum(
+            "bh,bhd,bn->bhdn", dtp[:, 0], xh[:, 0].astype(jnp.float32),
+            B_[:, 0].astype(jnp.float32),
+        )
+        st = state0 * dA[:, :, None, None] + dBx
+        y = jnp.einsum("bhdn,bn->bhd", st, C_[:, 0].astype(jnp.float32))
+        y = y[:, None]  # (B,1,H,hd)
+        stateF = st
+    else:
+        cs = min(chunk, s)
+        if s % cs:
+            raise ValueError(f"seq {s} not divisible by chunk {cs}")
+        y, stateF = _ssd_chunked(xh, dtp, A, B_, C_, state0, cs)
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    # gated RMSNorm (Mamba2's norm-before-out)
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    yf = y.astype(jnp.float32) * zf
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-5) * p["norm_z"].astype(jnp.float32)
+    out = dense(p["out_proj"], yf.astype(x.dtype))
+
+    if not update_state:
+        return out, None
+    return out, {"conv": new_conv.astype(jnp.bfloat16), "ssm": stateF}

@@ -1,0 +1,395 @@
+"""The decoder-LM skeleton shared by all ten assigned architectures.
+
+One parameter pytree + three entry points:
+
+  ``forward(params, cfg, inputs, ...)``   logits (+ updated cache/state)
+  ``train_loss(params, cfg, batch)``      scalar loss + metrics
+  ``init_model(key, cfg)``                parameters
+  ``init_decode_cache(cfg, batch, max_seq)``  per-family cache pytree
+
+Layer stacking uses ``lax.scan`` over a *stacked* layer pytree (leading dim
+L), so the HLO is compact (one layer body) for the 126-layer archs; remat is
+``jax.checkpoint`` on the scanned body.  Three block families:
+
+  * ``attn``   — [dense | moe | vlm | audio]: RMSNorm -> GQA -> RMSNorm ->
+                 (SwiGLU | GELU-MLP | MoE-FFN with sort-based dispatch);
+  * ``rwkv``   — RWKV-6 time-mix + channel-mix (LayerNorm pairs);
+  * ``hybrid`` — zamba2: groups of ``attn_every`` Mamba2 layers followed by
+                 one SHARED attention block (single param set reused by all
+                 groups, scan over groups).
+
+Caches are stacked along the layer dim and scanned together with the
+layer params, so decode is a single fused scan as well.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    DP,
+    cross_entropy,
+    dense,
+    gelu_mlp,
+    init_dense,
+    init_norm,
+    rms_norm,
+    shard_hint,
+    swiglu,
+)
+
+__all__ = ["init_model", "forward", "train_loss", "init_decode_cache"]
+
+Params = Dict[str, Any]
+
+# Sliding window used by the hybrid arch's shared attention for the 500k
+# shape (what makes zamba2 sub-quadratic end to end; DESIGN.md §5).
+HYBRID_ATTN_WINDOW = 4096
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_mlp(key, cfg: ModelConfig, dtype):
+    if cfg.family == "moe":
+        m = cfg.moe
+        return moe_mod.init_moe(
+            key, cfg.d_model, num_experts=m.num_experts, d_ff_expert=m.d_ff_expert,
+            top_k=m.top_k, num_shared=m.num_shared, d_ff_shared=m.d_ff_shared,
+            dtype=dtype,
+        )
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.family == "audio":  # GELU MLP
+        return {"up": init_dense(k1, cfg.d_model, cfg.d_ff, dtype=dtype),
+                "down": init_dense(k2, cfg.d_ff, cfg.d_model, dtype=dtype)}
+    return {"gate": init_dense(k1, cfg.d_model, cfg.d_ff, dtype=dtype),
+            "up": init_dense(k2, cfg.d_model, cfg.d_ff, dtype=dtype),
+            "down": init_dense(k3, cfg.d_ff, cfg.d_model, dtype=dtype)}
+
+
+def _init_attn_layer(key, cfg: ModelConfig, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": init_norm(cfg.d_model),
+        "attn": attn_mod.init_attention(
+            ka, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd,
+            bias=cfg.attn_bias, dtype=dtype,
+        ),
+        "ln2": init_norm(cfg.d_model),
+        "mlp": _init_mlp(km, cfg, dtype),
+    }
+
+
+def _init_rwkv_layer(key, cfg: ModelConfig, dtype):
+    return {
+        "ln1": init_norm(cfg.d_model),
+        "mix": rwkv_mod.init_rwkv6(
+            key, cfg.d_model, head_dim=cfg.ssm.head_dim, d_ff=cfg.d_ff, dtype=dtype
+        ),
+        "ln2": init_norm(cfg.d_model),
+    }
+
+
+def _init_mamba_layer(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    return {
+        "ln1": init_norm(cfg.d_model),
+        "mamba": ssm_mod.init_mamba2(
+            key, cfg.d_model, d_state=s.d_state, d_conv=s.d_conv,
+            expand=s.expand, head_dim=s.head_dim, dtype=dtype,
+        ),
+        "ln2": init_norm(cfg.d_model),
+        "mlp": {"gate": None, "up": None, "down": None},  # filled below
+    }
+
+
+def _stack(layers):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    p: Params = {}
+    if not cfg.takes_embeds:
+        p["embed"] = (
+            jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dtype)
+    p["final_norm"] = init_norm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_dense(keys[-2], cfg.d_model, cfg.vocab_size, dtype=dtype)
+
+    fam = _block_family(cfg)
+    if fam == "rwkv":
+        p["layers"] = _stack(
+            [_init_rwkv_layer(keys[i], cfg, dtype) for i in range(cfg.num_layers)]
+        )
+    elif fam == "hybrid":
+        g = cfg.ssm.attn_every
+        assert cfg.num_layers % g == 0, "hybrid: layers must divide into groups"
+        layers = []
+        for i in range(cfg.num_layers):
+            km, kf = jax.random.split(keys[i])
+            lyr = _init_mamba_layer(km, cfg, dtype)
+            k1, k2, k3 = jax.random.split(kf, 3)
+            lyr["mlp"] = {
+                "gate": init_dense(k1, cfg.d_model, cfg.d_ff, dtype=dtype),
+                "up": init_dense(k2, cfg.d_model, cfg.d_ff, dtype=dtype),
+                "down": init_dense(k3, cfg.d_ff, cfg.d_model, dtype=dtype),
+            }
+            layers.append(lyr)
+        p["layers"] = _stack(layers)
+        p["shared_attn"] = _init_attn_layer(keys[-3], cfg, dtype)  # ONE set
+    else:
+        p["layers"] = _stack(
+            [_init_attn_layer(keys[i], cfg, dtype) for i in range(cfg.num_layers)]
+        )
+    return p
+
+
+def _block_family(cfg: ModelConfig) -> str:
+    if cfg.family == "ssm":
+        return "rwkv"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    return "attn"
+
+
+# --------------------------------------------------------------------------
+# decode cache
+# --------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16) -> Params:
+    """Stacked (leading dim = num scanned layers) cache pytree."""
+    fam = _block_family(cfg)
+    L = cfg.num_layers
+
+    def rep(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+
+    if fam == "attn":
+        c = attn_mod.init_cache(batch, max_seq, cfg.num_kv_heads, cfg.hd, dtype=dtype)
+        return {"layers": rep(c, L)}
+    if fam == "rwkv":
+        s = rwkv_mod.init_rwkv_state(batch, cfg.d_model, head_dim=cfg.ssm.head_dim)
+        return {"layers": rep(s, L)}
+    # hybrid: mamba states per layer + one shared-attn cache per group
+    s = cfg.ssm
+    ms = ssm_mod.init_ssm_state(
+        batch, cfg.d_model, d_state=s.d_state, d_conv=s.d_conv,
+        expand=s.expand, head_dim=s.head_dim,
+    )
+    groups = cfg.num_layers // s.attn_every
+    window = HYBRID_ATTN_WINDOW if max_seq > HYBRID_ATTN_WINDOW else 0
+    ac = attn_mod.init_cache(batch, max_seq, cfg.num_kv_heads, cfg.hd,
+                             window=window, dtype=dtype)
+    return {"layers": rep(ms, L), "attn": rep(ac, groups)}
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _attn_block(lyr, cfg: ModelConfig, x, positions, cache, update_cache,
+                window: int = 0):
+    h, new_cache = attn_mod.attention(
+        lyr["attn"], rms_norm(lyr["ln1"], x, cfg.norm_eps), positions,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta, window=window, cache=cache,
+        update_cache=update_cache,
+    )
+    x = x + h
+    y = rms_norm(lyr["ln2"], x, cfg.norm_eps)
+    aux = None
+    if cfg.family == "moe":
+        m = cfg.moe
+        y, aux = moe_mod.moe_ffn(
+            lyr["mlp"], y, num_experts=m.num_experts, top_k=m.top_k,
+            capacity_factor=m.capacity_factor,
+        )
+    elif cfg.family == "audio":
+        y = gelu_mlp(lyr["mlp"], y)
+    else:
+        y = swiglu(lyr["mlp"], y)
+    return x + y, new_cache, aux
+
+
+def _rwkv_block(lyr, cfg: ModelConfig, x, state, update_state):
+    h, st_tm = rwkv_mod.rwkv6_timemix(
+        lyr["mix"], rms_norm(lyr["ln1"], x, cfg.norm_eps),
+        head_dim=cfg.ssm.head_dim, state=state, update_state=update_state,
+    )
+    x = x + h
+    h, st_cm = rwkv_mod.rwkv6_channelmix(
+        lyr["mix"], rms_norm(lyr["ln2"], x, cfg.norm_eps),
+        state=state, update_state=update_state,
+    )
+    new_state = None
+    if update_state:
+        new_state = {**st_tm, **st_cm}
+    return x + h, new_state
+
+
+def _mamba_block(lyr, cfg: ModelConfig, x, state, update_state):
+    s = cfg.ssm
+    h, new_state = ssm_mod.mamba2(
+        lyr["mamba"], rms_norm(lyr["ln1"], x, cfg.norm_eps),
+        d_state=s.d_state, expand=s.expand, head_dim=s.head_dim,
+        state=state, update_state=update_state,
+    )
+    x = x + h
+    x = x + swiglu(lyr["mlp"], rms_norm(lyr["ln2"], x, cfg.norm_eps))
+    return x, new_state
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _maybe_remat(f, cfg: ModelConfig):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+def _scan_attn(params, cfg, x, positions, cache, update_cache):
+    """Uniform attention stack; cache (if any) scanned along layers."""
+    aux0 = None
+    if cfg.family == "moe":
+        aux0 = {"lb_loss": jnp.zeros((), jnp.float32),
+                "dropped": jnp.zeros((), jnp.int32),
+                "max_load": jnp.zeros((), jnp.int32)}
+
+    def body(carry, xs):
+        x, aux = carry
+        lyr, c = xs
+        x, nc, a = _attn_block(lyr, cfg, x, positions, c, update_cache)
+        if aux is not None:
+            aux = {"lb_loss": aux["lb_loss"] + a["lb_loss"],
+                   "dropped": aux["dropped"] + a["dropped"],
+                   "max_load": jnp.maximum(aux["max_load"], a["max_load"])}
+        return (x, aux), nc
+
+    body = _maybe_remat(body, cfg)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, aux0), (params["layers"], cache)
+    )
+    return x, new_cache, aux
+
+
+def _scan_rwkv(params, cfg, x, cache, update_cache):
+    def body(x, xs):
+        lyr, st = xs
+        x, ns = _rwkv_block(lyr, cfg, x, st, update_cache)
+        return x, ns
+
+    body = _maybe_remat(body, cfg)
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    return x, new_cache
+
+
+def _scan_hybrid(params, cfg, x, positions, cache, update_cache):
+    """Groups of attn_every mamba layers + one shared attention block."""
+    g = cfg.ssm.attn_every
+    L = cfg.num_layers
+    groups = L // g
+    shared = params["shared_attn"]
+    window = 0
+    if cache is not None and "attn" in cache:
+        slots = cache["attn"]["k"].shape[2]
+        # ring buffer iff smaller than what positions can reach; static here
+        window = HYBRID_ATTN_WINDOW if slots == HYBRID_ATTN_WINDOW else 0
+    regroup = lambda t: jax.tree.map(
+        lambda a: a.reshape((groups, g) + a.shape[1:]), t
+    )
+    layers_g = regroup(params["layers"])
+    mstates_g = regroup(cache["layers"]) if cache is not None else None
+    acaches = cache["attn"] if cache is not None else None
+
+    def inner(x, xs):
+        lyr, st = xs
+        x, ns = _mamba_block(lyr, cfg, x, st, update_cache)
+        return x, ns
+
+    inner = _maybe_remat(inner, cfg)
+
+    def group_body(x, xs):
+        lyrs, msts, ac = xs
+        x, new_msts = jax.lax.scan(inner, x, (lyrs, msts))
+        x, new_ac, _ = _attn_block(shared, cfg, x, positions, ac, update_cache,
+                                   window=window)
+        return x, (new_msts, new_ac)
+
+    x, (new_m, new_a) = jax.lax.scan(
+        group_body, x, (layers_g, mstates_g, acaches)
+    )
+    if not update_cache:
+        return x, None
+    unroll = jax.tree.map(lambda a: a.reshape((L,) + a.shape[2:]), new_m)
+    return x, {"layers": unroll, "attn": new_a}
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    inputs: jax.Array,       # (B,S) int tokens  or (B,S,D) embeds
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Params] = None,
+    update_cache: bool = False,
+) -> Tuple[jax.Array, Optional[Params], Optional[Dict[str, jax.Array]]]:
+    """Returns (logits (B,S,V), new_cache | None, moe_aux | None)."""
+    if cfg.takes_embeds:
+        x = inputs.astype(jnp.bfloat16)
+        b, s = x.shape[:2]
+    else:
+        b, s = inputs.shape
+        x = jnp.take(params["embed"], inputs, axis=0)
+    x = shard_hint(x, DP, None, None)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    fam = _block_family(cfg)
+    aux = None
+    if fam == "attn":
+        lcache = cache["layers"] if cache is not None else None
+        x, nc, aux = _scan_attn(params, cfg, x, positions, lcache, update_cache)
+        new_cache = {"layers": nc} if update_cache else None
+    elif fam == "rwkv":
+        lcache = cache["layers"] if cache is not None else None
+        x, nc = _scan_rwkv(params, cfg, x, lcache, update_cache)
+        new_cache = {"layers": nc} if update_cache else None
+    else:
+        x, new_cache = _scan_hybrid(params, cfg, x, positions, cache, update_cache)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    x = shard_hint(x, DP, None, None)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = dense(params["lm_head"], x)
+    # vocab-sharded logits: GSPMD must NOT replicate (B,S,V) per device
+    logits = shard_hint(logits, DP, None, "model")
+    return logits, new_cache, aux
+
+
+def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+               lb_coef: float = 0.01):
+    """batch: {"inputs": (B,S)[int] | (B,S,D), "labels": (B,S) int}."""
+    logits, _, aux = forward(params, cfg, batch["inputs"])
+    loss = cross_entropy(logits, batch["labels"])
+    metrics = {"ce": loss}
+    if aux is not None:
+        loss = loss + lb_coef * aux["lb_loss"] / cfg.num_layers
+        metrics["lb_loss"] = aux["lb_loss"] / cfg.num_layers
+        metrics["dropped"] = aux["dropped"].astype(jnp.float32)
+    metrics["loss"] = loss
+    return loss, metrics

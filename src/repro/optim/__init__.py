@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+from repro.optim.compression import compress_grads, decompress_grads

@@ -1,0 +1,115 @@
+"""AdamW with configurable moment dtypes (memory-tiered optimizer states).
+
+At 405B params on 16 GiB/chip v5e, fp32 (m, v) does not fit next to bf16
+weights + grads even at 256-way sharding (4x405e9/256 bytes/moment-pair).
+We support ``m_dtype=bfloat16`` (sign+magnitude coarse is fine for the
+first moment) while keeping ``v`` in fp32 by default, and fully-quantized
+int8 moments with per-tensor scales as the aggressive tier — the
+distributed-optimization "gradient/state compression" knob, selectable per
+config (see launch/shardings.py for which archs need it).
+
+Pure-functional: state is a pytree congruent to params; updates are
+elementwise, so the state inherits the params' sharding (ZeRO by
+construction: params sharded over (data, model) => moments too).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4              # peak; schedule multiplies
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    m_dtype: str = "float32"      # float32 | bfloat16 | int8
+    v_dtype: str = "float32"      # float32 | bfloat16 | int8
+
+
+def _q_init(p: jax.Array, dtype: str):
+    if dtype == "int8":
+        return {"q": jnp.zeros(p.shape, jnp.int8),
+                "scale": jnp.zeros((), jnp.float32)}
+    return jnp.zeros(p.shape, jnp.dtype(dtype))
+
+
+def _q_read(s, dtype: str) -> jax.Array:
+    if dtype == "int8":
+        return s["q"].astype(jnp.float32) * s["scale"]
+    return s.astype(jnp.float32)
+
+
+def _q_write(x: jax.Array, dtype: str):
+    if dtype == "int8":
+        scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+        return {"q": jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8),
+                "scale": scale}
+    return x.astype(jnp.dtype(dtype))
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> Dict[str, Any]:
+    return {
+        "m": jax.tree.map(lambda p: _q_init(p, cfg.m_dtype), params),
+        "v": jax.tree.map(lambda p: _q_init(p, cfg.v_dtype), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(grads: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: Dict[str, Any],
+    cfg: AdamWConfig,
+    lr_scale: jax.Array | float = 1.0,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (params, state, metrics)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    is_q = lambda s: isinstance(s, dict) and "q" in s
+
+    def upd(p, g, m_s, v_s):
+        g = g.astype(jnp.float32) * clip
+        m = _q_read(m_s, cfg.m_dtype) * cfg.b1 + (1 - cfg.b1) * g
+        v = _q_read(v_s, cfg.v_dtype) * cfg.b2 + (1 - cfg.b2) * g * g
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return p2, _q_write(m, cfg.m_dtype), _q_write(v, cfg.v_dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = [m for m in _iter_moments(state["m"], tdef)]
+    flat_v = [v for v in _iter_moments(state["v"], tdef)]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+def _iter_moments(tree: Any, tdef) -> list:
+    """Flatten a moment tree to match the params treedef (int8 moments are
+    {q, scale} dicts which must be treated as leaves)."""
+    return tdef.flatten_up_to(tree)

@@ -1,0 +1,117 @@
+"""Batched serving engine: prefill + decode step factories and a driver.
+
+``make_prefill_step`` / ``make_decode_step`` produce the jitted, sharded
+callables that the dry-run lowers for the ``prefill_32k`` / ``decode_32k`` /
+``long_500k`` cells; ``Engine`` drives them for real generation (greedy or
+temperature sampling) with continuous batching via serve/scheduler.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.shardings import (
+    ShardingStrategy, batch_specs, cache_specs, named, param_specs,
+)
+from repro.models.transformer import forward, init_decode_cache, init_model
+
+__all__ = ["ServeConfig", "Engine", "make_prefill_step", "make_decode_step"]
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int
+    batch_size: int
+    temperature: float = 0.0  # 0 = greedy
+
+
+def make_prefill_step(cfg: ModelConfig, mesh,
+                      strat: ShardingStrategy = ShardingStrategy(),
+                      params_like: Any = None,
+                      donate_cache: bool = True):
+    """prefill(params, inputs, cache) -> (last_logits, cache)."""
+    if params_like is None:
+        params_like = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+    psh = named(mesh, param_specs(params_like, cfg, mesh, strat))
+
+    def prefill(params, inputs, cache):
+        logits, new_cache, _ = forward(params, cfg, inputs, cache=cache,
+                                       update_cache=True)
+        return logits[:, -1], new_cache
+
+    return jax.jit(
+        prefill,
+        in_shardings=(psh, None, None),
+        donate_argnums=(2,) if donate_cache else (),
+    ), psh
+
+
+def make_decode_step(cfg: ModelConfig, mesh,
+                     strat: ShardingStrategy = ShardingStrategy(),
+                     params_like: Any = None):
+    """decode(params, tok, pos, cache) -> (logits (B,V), cache). Donates
+    the cache (in-place KV update — the framework-level analogue of the
+    paper's buffer reuse)."""
+    if params_like is None:
+        params_like = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+    psh = named(mesh, param_specs(params_like, cfg, mesh, strat))
+
+    def decode(params, tok, pos, cache):
+        logits, new_cache, _ = forward(params, cfg, tok, positions=pos,
+                                       cache=cache, update_cache=True)
+        return logits[:, 0], new_cache
+
+    return jax.jit(
+        decode,
+        in_shardings=(psh, None, None, None),
+        donate_argnums=(3,),
+    ), psh
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, mesh, params,
+                 strat: ShardingStrategy = ShardingStrategy()):
+        self.cfg, self.scfg, self.mesh = cfg, scfg, mesh
+        self.params = params
+        like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+        self.prefill_fn, _ = make_prefill_step(cfg, mesh, strat, like)
+        self.decode_fn, _ = make_decode_step(cfg, mesh, strat, like)
+        csh = named(mesh, cache_specs(
+            cfg, mesh, jax.eval_shape(
+                lambda: init_decode_cache(cfg, scfg.batch_size, scfg.max_seq)
+            ), strat))
+        self.cache = jax.jit(
+            lambda: init_decode_cache(cfg, scfg.batch_size, scfg.max_seq),
+            out_shardings=csh,
+        )()
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / self.scfg.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def generate(self, prompts: jax.Array, max_new: int, seed: int = 0):
+        """prompts: (B, P) int32.  Returns (B, max_new) generated tokens."""
+        b, plen = prompts.shape
+        assert b == self.scfg.batch_size
+        logits, self.cache = self.prefill_fn(self.params, prompts, self.cache)
+        key = jax.random.PRNGKey(seed)
+        toks = []
+        tok = self._sample(logits, key)
+        for i in range(max_new):
+            toks.append(tok)
+            pos = jnp.full((b, 1), plen + i, jnp.int32)
+            logits, self.cache = self.decode_fn(
+                self.params, tok[:, None], pos, self.cache
+            )
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+        return jnp.stack(toks, axis=1)

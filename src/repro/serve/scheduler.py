@@ -1,0 +1,53 @@
+"""Batch scheduler: orders admitted requests by remaining length with the
+paper's sorter (IPS4o as a library — DESIGN.md §3), so continuous batches
+retire together and padding waste is minimized."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ips4o import ips4o_sort
+
+__all__ = ["Request", "Scheduler"]
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt_len: int
+    max_new: int
+    done: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - self.done
+
+
+@dataclass
+class Scheduler:
+    batch_size: int
+    queue: List[Request] = field(default_factory=list)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def next_batch(self) -> List[Request]:
+        """Admit up to batch_size requests, shortest-remaining-first.
+
+        Sort keyed on remaining length via ips4o_sort — requests that retire
+        together sit together, so slot churn (and therefore prefill restarts)
+        is minimized.
+        """
+        if not self.queue:
+            return []
+        keys = jnp.asarray([r.remaining for r in self.queue], jnp.int32)
+        idx = jnp.arange(len(self.queue), dtype=jnp.int32)
+        _, order = ips4o_sort(keys, idx)
+        order = np.asarray(order)
+        batch = [self.queue[i] for i in order[: self.batch_size]]
+        picked = set(int(order[i]) for i in range(min(self.batch_size, len(order))))
+        self.queue = [r for i, r in enumerate(self.queue) if i not in picked]
+        return batch

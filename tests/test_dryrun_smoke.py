@@ -1,0 +1,35 @@
+"""The multi-pod dry-run deliverable must keep compiling.
+
+Runs ONE cheap cell (rwkv6-1.6b decode_32k — ~3 s compile) through the
+real 512-virtual-device path in a subprocess (jax locks the device count
+at first init, so it cannot run in-process with the rest of the suite).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_CHILD = r"""
+import sys
+from repro.launch.dryrun import lower_cell
+row = lower_cell("rwkv6-1.6b", "decode_32k", multi_pod=%s, verbose=False)
+import json
+print("RESULT " + json.dumps({k: row[k] for k in ("status", "mesh", "chips")}))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_dryrun_cell_compiles(multi_pod):
+    env = {**os.environ, "PYTHONPATH": os.pathsep.join(sys.path)}
+    r = subprocess.run(
+        [sys.executable, "-c", _CHILD % multi_pod],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    row = json.loads(line[len("RESULT "):])
+    assert row["status"] == "ok"
+    assert row["chips"] == (512 if multi_pod else 256)

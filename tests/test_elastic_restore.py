@@ -1,0 +1,71 @@
+"""Elastic rescale: a checkpoint written on one mesh must restore onto a
+DIFFERENT mesh (new device count / topology) with identical values.
+
+Each mesh runs in a subprocess (jax pins the host device count at first
+init): save on (data=2, model=2), restore on (data=4, model=1) and on a
+single device, comparing values bitwise.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+_SAVE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint.manager import CheckpointManager
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+state = {
+    "w": jax.device_put(
+        jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+        NamedSharding(mesh, P("data", "model"))),
+    "b16": jax.device_put(
+        (jnp.arange(16, dtype=jnp.float32) / 7).astype(jnp.bfloat16),
+        NamedSharding(mesh, P("data"))),
+}
+CheckpointManager(%r).save(3, state)
+print("SAVED")
+"""
+
+_RESTORE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint.manager import CheckpointManager
+mesh = jax.make_mesh(%r, %r)
+like = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32),
+        "b16": jax.ShapeDtypeStruct((16,), jnp.bfloat16)}
+sh = {"w": NamedSharding(mesh, P(%r)), "b16": NamedSharding(mesh, P())}
+ck = CheckpointManager(%r)
+assert ck.latest_step() == 3
+out = ck.restore(3, like, sh)
+w = np.asarray(out["w"]); b = np.asarray(out["b16"], np.float32)
+assert w.shape == (8, 8) and np.array_equal(w.ravel(), np.arange(64, dtype=np.float32))
+assert np.allclose(b, (np.arange(16) / 7).astype(np.float32), atol=1e-2)
+print("RESTORED", out["w"].sharding)
+"""
+
+
+def _run(code):
+    env = {**os.environ, "PYTHONPATH": os.pathsep.join(sys.path)}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+@pytest.mark.parametrize("ndev,shape,axes,wspec", [
+    (4, (4, 1), ("data", "model"), "data"),
+    (1, (1,), ("data",), None),
+])
+def test_elastic_restore(tmp_path, ndev, shape, axes, wspec):
+    ck = str(tmp_path / "ck")
+    out = _run(_SAVE % ck)
+    assert "SAVED" in out
+    out = _run(_RESTORE % (ndev, shape, axes, wspec, ck))
+    assert "RESTORED" in out

@@ -1,0 +1,153 @@
+"""Correctness of the core IPS4o sort vs the stable oracle.
+
+Covers: all nine paper distributions, several sizes (1- and 2-level paths),
+dtypes, payload association, equality buckets, and the robustness fallback.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.ips4o import SortConfig, ips4o_sort, plan_levels
+from repro.core.ref import ref_sort
+from repro.core.s3sort import s3_sort
+from repro.data.distributions import DISTRIBUTIONS, make_input
+
+SIZES = [0, 1, 2, 17, 255, 4096, 10_000, 100_000]
+DISTS = sorted(DISTRIBUTIONS)
+
+
+@pytest.mark.parametrize("dist", DISTS)
+@pytest.mark.parametrize("n", [4096, 100_000])
+def test_distributions(dist, n):
+    x = make_input(dist, n, np.float32, seed=3)
+    out = np.asarray(ips4o_sort(jnp.asarray(x)))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_sizes_uniform(n):
+    x = make_input("Uniform", n, np.float32, seed=n)
+    out = np.asarray(ips4o_sort(jnp.asarray(x)))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+@pytest.mark.parametrize(
+    "dtype", [np.float32, np.float64, np.int32, np.uint32, np.int64, jnp.bfloat16]
+)
+def test_dtypes(dtype):
+    n = 20_000
+    if dtype is jnp.bfloat16:
+        x = jnp.asarray(make_input("Uniform", n, np.float32, seed=7)).astype(dtype)
+        out = np.asarray(ips4o_sort(x).astype(jnp.float32))
+        np.testing.assert_array_equal(out, np.sort(np.asarray(x.astype(jnp.float32))))
+        return
+    x = np.asarray(jnp.asarray(make_input("Uniform", n, dtype, seed=7)))  # honor x64-off cast
+    out = np.asarray(ips4o_sort(jnp.asarray(x)))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+def test_extreme_values_int():
+    # dtype-max keys collide with the padding sentinel: must still sort and
+    # keep payload association (sentinel handling uses a dedicated bucket).
+    n = 9000
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 10, n).astype(np.int32)
+    x[:100] = np.iinfo(np.int32).max
+    x[100:200] = np.iinfo(np.int32).min
+    v = np.arange(n, dtype=np.int32)
+    ks, vs = ips4o_sort(jnp.asarray(x), jnp.asarray(v))
+    ks, vs = np.asarray(ks), np.asarray(vs)
+    np.testing.assert_array_equal(ks, np.sort(x))
+    np.testing.assert_array_equal(x[vs], ks)
+
+
+@pytest.mark.parametrize("n", [4096, 150_000])
+def test_payload_association(n):
+    x = make_input("TwoDup", n, np.float32, seed=5)
+    v = np.arange(n, dtype=np.int32)
+    ks, vs = ips4o_sort(jnp.asarray(x), jnp.asarray(v))
+    ks, vs = np.asarray(ks), np.asarray(vs)
+    np.testing.assert_array_equal(ks, np.sort(x))
+    np.testing.assert_array_equal(x[vs], ks)
+    assert len(set(vs.tolist())) == n  # a permutation
+
+
+def test_payload_pytree():
+    n = 30_000
+    x = make_input("Uniform", n, np.float32, seed=9)
+    vals = {
+        "idx": jnp.arange(n, dtype=jnp.int32),
+        "mat": jnp.asarray(np.random.default_rng(1).random((n, 3), np.float32)),
+    }
+    ks, vs = ips4o_sort(jnp.asarray(x), vals)
+    order = np.argsort(x, kind="stable")
+    np.testing.assert_array_equal(np.asarray(ks), x[order])
+    np.testing.assert_array_equal(x[np.asarray(vs["idx"])], np.asarray(ks))
+    np.testing.assert_array_equal(
+        np.asarray(vs["mat"]), np.asarray(vals["mat"])[np.asarray(vs["idx"])]
+    )
+
+
+def test_fallback_disabled_still_ok_uniform():
+    n = 100_000
+    x = make_input("Uniform", n, np.float32, seed=11)
+    cfg = SortConfig(fallback=False)
+    out = np.asarray(ips4o_sort(jnp.asarray(x), cfg=cfg))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+def test_fallback_rescues_adversarial():
+    # Adversarial: nearly-all-duplicates of *two* values plus noise; with
+    # tiny k and no oversampling headroom some regular bucket may exceed W/2;
+    # the lax.cond fallback must still give a correct result.
+    n = 65_536
+    rng = np.random.default_rng(13)
+    x = np.where(rng.random(n) < 0.99, 1.0, rng.random(n)).astype(np.float32)
+    cfg = SortConfig(base_case=2048, kmax=8, slack=1, max_sample=64)
+    out = np.asarray(ips4o_sort(jnp.asarray(x), cfg=cfg))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+def test_plan_levels():
+    cfg = SortConfig()
+    assert plan_levels(4096, cfg) == []
+    assert plan_levels(8192, cfg) == []
+    one = plan_levels(2**17, cfg)
+    assert len(one) == 1
+    two = plan_levels(2**22, cfg)
+    assert len(two) == 2
+    with pytest.raises(ValueError):
+        plan_levels(2**40, cfg)
+
+
+def test_jit_and_donation():
+    n = 50_000
+    x = make_input("Exponential", n, np.float32, seed=21)
+    f = jax.jit(lambda a: ips4o_sort(a), donate_argnums=0)
+    out = np.asarray(f(jnp.asarray(x)))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+@pytest.mark.parametrize("dist", ["Uniform", "RootDup", "Ones"])
+def test_s3sort_baseline(dist):
+    n = 80_000
+    x = make_input(dist, n, np.float32, seed=23)
+    out = np.asarray(s3_sort(jnp.asarray(x)))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+def test_s3sort_payload():
+    n = 40_000
+    x = make_input("TwoDup", n, np.float32, seed=29)
+    v = np.arange(n, dtype=np.int32)
+    ks, vs = s3_sort(jnp.asarray(x), jnp.asarray(v))
+    np.testing.assert_array_equal(np.asarray(ks), np.sort(x))
+    np.testing.assert_array_equal(x[np.asarray(vs)], np.asarray(ks))
+
+
+def test_ref_sort_stability():
+    x = jnp.asarray([3, 1, 3, 1], jnp.int32)
+    v = jnp.arange(4, dtype=jnp.int32)
+    ks, vs = ref_sort(x, v)
+    np.testing.assert_array_equal(np.asarray(vs), [1, 3, 0, 2])

@@ -1,0 +1,90 @@
+"""Property-based tests (hypothesis) for the system's sorting invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.classifier import classify
+from repro.core.ips4o import SortConfig, ips4o_sort
+from repro.core.partition import stable_partition
+from repro.core.ref import ref_partition
+
+_small_cfg = SortConfig(base_case=512, kmax=8, tile=256, max_sample=256)
+
+
+@st.composite
+def key_arrays(draw, max_n=3000):
+    n = draw(st.integers(0, max_n))
+    kind = draw(st.sampled_from(["float", "int", "dup", "const", "sortedish"]))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    if kind == "float":
+        return rng.standard_normal(n).astype(np.float32)
+    if kind == "int":
+        return rng.integers(-(2**31), 2**31 - 1, n).astype(np.int32).astype(np.float32)
+    if kind == "dup":
+        return rng.integers(0, max(1, n // 50 + 1), n).astype(np.float32)
+    if kind == "const":
+        lo, hi = float(np.float32(-1e30)), float(np.float32(1e30))
+        return np.full(n, draw(st.floats(lo, hi, width=32)), np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    x.sort()
+    return x
+
+
+@given(key_arrays())
+@settings(max_examples=40, deadline=None)
+def test_sorted_and_permutation(x):
+    out = np.asarray(ips4o_sort(jnp.asarray(x), cfg=_small_cfg))
+    assert out.shape == x.shape
+    if len(out) > 1:
+        assert np.all(out[:-1] <= out[1:]), "output not sorted"
+    np.testing.assert_array_equal(np.sort(out), np.sort(x))  # multiset equal
+
+
+@given(key_arrays(max_n=1500))
+@settings(max_examples=25, deadline=None)
+def test_idempotent(x):
+    a = np.asarray(ips4o_sort(jnp.asarray(x), cfg=_small_cfg))
+    b = np.asarray(ips4o_sort(jnp.asarray(a), cfg=_small_cfg))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(key_arrays(max_n=1500))
+@settings(max_examples=25, deadline=None)
+def test_payload_is_inverse_permutation(x):
+    v = np.arange(len(x), dtype=np.int32)
+    ks, vs = ips4o_sort(jnp.asarray(x), jnp.asarray(v), cfg=_small_cfg)
+    ks, vs = np.asarray(ks), np.asarray(vs)
+    np.testing.assert_array_equal(x[vs], ks)
+    assert len(np.unique(vs)) == len(x)
+
+
+@given(
+    st.integers(1, 64).map(lambda k: 1 << (k % 7 + 1)),  # k in {2..128} pow2
+    st.integers(0, 2**31),
+    st.integers(2, 2000),
+)
+@settings(max_examples=30, deadline=None)
+def test_classifier_agrees_with_searchsorted(k, seed, n):
+    rng = np.random.default_rng(seed)
+    keys = rng.standard_normal(n).astype(np.float32)
+    spl = np.sort(rng.standard_normal(k - 1).astype(np.float32))
+    got = np.asarray(classify(jnp.asarray(keys), jnp.asarray(spl), k))
+    j = np.searchsorted(spl, keys, side="left")  # bucket = |{s < e}|
+    eq = np.zeros(n, np.int32)
+    in_range = j < k - 1
+    eq[in_range] = (keys[in_range] == spl[j[in_range]]).astype(np.int32)
+    np.testing.assert_array_equal(got, 2 * j + eq)
+
+
+@given(st.integers(0, 2**31), st.integers(1, 16), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_stable_partition_matches_ref(seed, nbf, tiles):
+    nb, tile = nbf, 128
+    n = tile * tiles
+    rng = np.random.default_rng(seed)
+    bucket = jnp.asarray(rng.integers(0, nb, n).astype(np.int32))
+    arrays = {"a": jnp.arange(n, dtype=jnp.int32)}
+    got, off_g = stable_partition(bucket, arrays, nb, tile)
+    exp, off_e = ref_partition(bucket, arrays, nb)
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(exp["a"]))
+    np.testing.assert_array_equal(np.asarray(off_g), np.asarray(off_e))
