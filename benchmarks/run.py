@@ -6,6 +6,7 @@
   sort_scaling       Fig. 7 / 15      shard_map scaling (subprocess per d)
   io_volume          §4.5 / App. B    in-place vs out-of-place I/O volume
   moe_dispatch       framework role   sort-based vs one-hot MoE dispatch
+  sort_ops           DESIGN.md §5     repro.ops: topk vs full sort, group_by
 
 ``python -m benchmarks.run [--quick] [--only NAME]`` prints one CSV block
 per table plus a Table-1-style summary.
@@ -23,6 +24,7 @@ MODULES = [
     "sort_scaling",
     "io_volume",
     "moe_dispatch",
+    "sort_ops",
 ]
 
 

@@ -3,6 +3,9 @@
 Runs the deepseek-moe-16b family (reduced config) and shows the IPS4o
 partition machinery routing tokens to experts:
 
+  * expert-major token grouping through ``repro.ops.group_by`` — the
+    subsystem view of dispatch — with the stable-partition and fused
+    Pallas (``kernels.dispatch_rank``) engines agreeing,
   * per-expert token counts from the tile-histogram pass,
   * capacity clamping (the overflow-block analogue) and drop fraction,
   * gradient flow through the dispatch (train a few steps, loss drops),
@@ -18,6 +21,7 @@ from repro.configs.registry import get_reduced
 from repro.data.pipeline import SyntheticLM
 from repro.models.moe import expert_capacity, sort_dispatch
 from repro.models.transformer import init_model, train_loss
+from repro.ops import group_by
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 
 # --- 1. dispatch mechanics on raw routing ids ------------------------------
@@ -30,6 +34,18 @@ print(f"experts={E} top_k={k} tokens={n} capacity={cap}")
 print(f"per-expert counts: {np.asarray(counts)}")
 print(f"dropped: {1 - float(kept.sum()) / (n * k):.4%}")
 assert len(np.unique(np.asarray(slot)[np.asarray(kept)])) == int(kept.sum())
+
+# --- 1b. the same grouping as a repro.ops library call ---------------------
+# group_by IS the dispatch problem: group (token, k) entries expert-major.
+tok_idx = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+g = group_by(flat_e, tok_idx, num_groups=E)                 # stable partition
+gp = group_by(flat_e, tok_idx, num_groups=E, method="pallas")  # fused kernel
+np.testing.assert_array_equal(np.asarray(g.counts), np.asarray(counts))
+np.testing.assert_array_equal(np.asarray(g.keys), np.asarray(gp.keys))
+np.testing.assert_array_equal(np.asarray(g.perm), np.asarray(gp.perm))
+assert np.all(np.diff(np.asarray(g.keys)) >= 0)  # expert-major grouping
+print(f"ops.group_by == pallas dispatch-rank grouping  "
+      f"(max per-expert load {int(np.asarray(g.counts).max())})")
 
 # --- 2. the same machinery inside the full model ---------------------------
 cfg = get_reduced("deepseek-moe-16b")

@@ -41,15 +41,6 @@ __all__ = ["distributed_sort", "make_distributed_sorter"]
 AxisNames = Union[str, Tuple[str, ...]]
 
 
-def _axis_size(axis: AxisNames) -> Any:
-    if isinstance(axis, str):
-        return jax.lax.axis_size(axis)
-    sz = 1
-    for a in axis:
-        sz *= jax.lax.axis_size(a)
-    return sz
-
-
 def _local_shard_sort(
     keys: jax.Array,
     values: Optional[jax.Array],   # (n_local, w) payload rows or None
@@ -62,6 +53,24 @@ def _local_shard_sort(
     """Body run per shard under shard_map."""
     n_local = keys.shape[0]
     sent = sampling.sentinel_for(keys.dtype)
+
+    if d == 1:
+        # Degenerate mesh: the whole exchange is the identity (and an
+        # all_to_all over a size-1 axis trips this jax version).  Pad (or,
+        # for undersized capacity, truncate + flag overflow, matching the
+        # d > 1 contract) and sort locally.
+        m_valid = min(n_local, capacity)
+        pad = jnp.full((capacity - m_valid,), sent, keys.dtype)
+        flat = jnp.concatenate([keys[:m_valid], pad])
+        m = jnp.asarray(m_valid, jnp.int32)
+        overflow = jnp.asarray(n_local > capacity)
+        if values is None:
+            return ips4o_sort(flat, cfg=cfg), m[None], overflow[None]
+        vpad = jnp.zeros((capacity - m_valid, values.shape[1]), values.dtype)
+        sorted_local, sorted_v = ips4o_sort(
+            flat, jnp.concatenate([values[:m_valid], vpad], axis=0), cfg=cfg
+        )
+        return sorted_local, sorted_v, m[None], overflow[None]
 
     # --- 0. balanced pre-exchange ------------------------------------------
     # A skew-placed input (e.g. already sorted) makes the value-based
@@ -82,7 +91,6 @@ def _local_shard_sort(
         ).reshape(n_local, w)
 
     # --- 1. sampling: local sample, global gather, shared splitters -------
-    axis0 = axis if isinstance(axis, str) else axis[0]
     my = jax.lax.axis_index(axis)
     rng = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), my)
     pos = jax.random.randint(rng, (oversample,), 0, n_local)

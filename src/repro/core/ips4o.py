@@ -37,7 +37,22 @@ from repro.core import sampling
 from repro.core.classifier import classify, classify_segmented
 from repro.core.partition import stable_partition
 
-__all__ = ["SortConfig", "ips4o_sort", "is4o_sort", "plan_levels", "make_sorter"]
+__all__ = [
+    "SortConfig",
+    "ips4o_sort",
+    "is4o_sort",
+    "plan_levels",
+    "make_sorter",
+    # level-pass internals, consumed by ``repro.ops`` (DESIGN.md §5)
+    "pad_with_sentinel",
+    "level_pass",
+    "segmented_level_pass",
+    "partition_passes",
+    "base_case",
+    "bucket_violations",
+    "segment_ids",
+    "stable_full_sort",
+]
 
 
 @dataclass(frozen=True)
@@ -79,7 +94,8 @@ def _auto_tile(n: int, nb: int, cfg: SortConfig) -> int:
     return tile
 
 
-def _seg_ids(offsets: jax.Array, n: int) -> jax.Array:
+def segment_ids(offsets: jax.Array, n: int) -> jax.Array:
+    """Per-position bucket/segment id from (nb+1,) boundary offsets."""
     return (
         jnp.searchsorted(offsets, jnp.arange(n, dtype=jnp.int32), side="right").astype(
             jnp.int32
@@ -99,9 +115,14 @@ def _apply_window_perm(perm: jax.Array, a: jax.Array) -> jax.Array:
     return jax.vmap(lambda row, p: jnp.take(row, p, axis=0))(a, perm)
 
 
-def _base_case(arrays: Any, fb: jax.Array, W: int) -> Any:
-    """Two overlapped segmented window-sort passes (DESIGN.md §4.3)."""
-    n = fb.shape[0]
+def base_case(arrays: Any, fb: jax.Array, W: int, limit: Optional[int] = None) -> Any:
+    """Two overlapped segmented window-sort passes (DESIGN.md §4.3).
+
+    ``limit`` (static, multiple of W) restricts both passes to the index
+    range [0, limit) — used by the partial sorts in ``repro.ops.topk``,
+    which only need the buckets covering the first ``k`` ranks sorted.
+    """
+    n = fb.shape[0] if limit is None else limit
 
     def one_pass(arrays, fb, lo, hi):
         keys = arrays["k"][lo:hi]
@@ -127,76 +148,154 @@ def _base_case(arrays: Any, fb: jax.Array, W: int) -> Any:
     return arrays
 
 
-def _stable_full_sort(arrays: Any) -> Any:
+def stable_full_sort(arrays: Any) -> Any:
+    """Plain stable sort of the arrays dict by key — the robustness fallback."""
     order = jnp.argsort(arrays["k"], stable=True)
     return jax.tree.map(lambda a: jnp.take(a, order, axis=0), arrays)
 
 
-def _sort_padded(arrays: Any, n_real: int, cfg: SortConfig, levels: Sequence[int]) -> Any:
-    """Sort padded arrays dict (pads = sentinel keys at the tail)."""
+def pad_with_sentinel(arrays: Any, unit: int) -> Any:
+    """Pad every leaf of the arrays dict to a multiple of ``unit``; pad keys
+    get the dtype sentinel so they sort to the tail (the overflow-block
+    analogue).  Non-key leaves are zero-padded."""
+    n = arrays["k"].shape[0]
+    n_pad = -(-n // unit) * unit
+    if n_pad == n:
+        return arrays
+    pad_n = n_pad - n
+    sent = sampling.sentinel_for(arrays["k"].dtype)
+
+    def pad(a):
+        padding = [(0, pad_n)] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, padding)
+
+    arrays = jax.tree.map(pad, arrays)
+    arrays["k"] = arrays["k"].at[n:].set(sent)
+    return arrays
+
+
+def level_pass(
+    arrays: Any, n_real: int, k: int, cfg: SortConfig, rng: jax.Array
+) -> Tuple[Any, jax.Array, int, int]:
+    """One *global* level pass: sample -> branchless classify -> stable
+    block partition.  Pads (positions >= n_real) go to a dedicated final
+    bucket.  Returns (arrays, offsets, nb, pad_bucket) with nb = 2k + 1."""
     keys = arrays["k"]
     n = keys.shape[0]
-    W = cfg.base_case
-    rng = jax.random.PRNGKey(cfg.seed)
-
-    if not levels:
-        # Single window: plain stable base case (the paper's smallSort).
-        return _stable_full_sort(arrays)
-
-    # ---- Level 1: global splitters --------------------------------------
-    k1 = levels[0]
-    r1, r2 = jax.random.split(rng)
-    m1 = min(
-        max(sampling.oversampling_factor(n_real) * k1, k1), cfg.max_sample, n_real
-    )
-    sample_pos = jax.random.randint(r1, (m1,), 0, n_real)
+    m1 = min(max(sampling.oversampling_factor(n_real) * k, k), cfg.max_sample, n_real)
+    sample_pos = jax.random.randint(rng, (m1,), 0, n_real)
     sample = jnp.sort(jnp.take(keys, sample_pos, axis=0))
-    spl1 = sampling.select_splitters(sample, k1)
-    b1 = classify(keys, spl1, k1)
+    spl = sampling.select_splitters(sample, k)
+    b = classify(keys, spl, k)
     is_pad = jnp.arange(n, dtype=jnp.int32) >= n_real
-    nb1 = 2 * k1 + 1  # +1: dedicated pad bucket (the overflow-block analogue)
-    b1 = jnp.where(is_pad, 2 * k1, b1)
-    arrays, off1 = stable_partition(b1, arrays, nb1, _auto_tile(n, nb1, cfg))
+    nb = 2 * k + 1  # +1: dedicated pad bucket (the overflow-block analogue)
+    b = jnp.where(is_pad, 2 * k, b)
+    arrays, off = stable_partition(b, arrays, nb, _auto_tile(n, nb, cfg))
+    return arrays, off, nb, 2 * k
+
+
+def segmented_level_pass(
+    arrays: Any,
+    seg_offsets: jax.Array,
+    num_seg: int,
+    n_real: int,
+    k: int,
+    cfg: SortConfig,
+    rng: jax.Array,
+    sample_cap: int = 2048,
+) -> Tuple[Any, jax.Array, int]:
+    """One *segmented* level pass: per-segment splitters, flattened
+    classification, composite-bucket partition.  This is recursion level 2
+    of the full sort and the whole of ``repro.ops.segmented_sort``.
+
+    ``seg_offsets`` (num_seg+1,) bounds each segment; segments keep their
+    index ranges (the composite id is monotone in segment and the partition
+    is stable).  Returns (arrays, offsets, nb) with nb = num_seg * 2k.
+    """
     keys = arrays["k"]
+    n = keys.shape[0]
+    seg = segment_ids(seg_offsets, n)
+    m = min(max(sampling.oversampling_factor(n_real) * k, k), sample_cap)
+    seg_rngs = jax.random.split(rng, num_seg)
+    pos = jax.vmap(lambda r, lo, hi: sampling.sample_indices(r, m, lo, hi))(
+        seg_rngs, seg_offsets[:-1], seg_offsets[1:]
+    )
+    svals = jnp.sort(jnp.take(keys, pos.reshape(-1), axis=0).reshape(num_seg, m), axis=-1)
+    spl = sampling.select_splitters(svals, k)  # (num_seg, k-1)
+    local = classify_segmented(keys, seg, spl, k)
+    comp = seg * (2 * k) + local
+    nb = num_seg * 2 * k
+    arrays, offsets = stable_partition(comp, arrays, nb, _auto_tile(n, nb, cfg))
+    return arrays, offsets, nb
 
+
+def partition_passes(
+    arrays: Any, n_real: int, cfg: SortConfig, levels: Sequence[int]
+) -> Tuple[Any, jax.Array, int, Optional[int]]:
+    """Run the (at most two) level passes of the flattened recursion.
+
+    Returns (arrays, offsets, nb, pad_bucket); after this every bucket is
+    contiguous, buckets are in key order, odd ids are equality buckets, and
+    pads are at the tail (in ``pad_bucket`` after one level, in an odd
+    sentinel-equality bucket after two).
+    """
+    rng = jax.random.PRNGKey(cfg.seed)
+    r1, r2 = jax.random.split(rng)
+    arrays, off1, nb1, pad_bucket = level_pass(arrays, n_real, levels[0], cfg, r1)
     if len(levels) == 1:
-        offsets, nb = off1, nb1
-        pad_bucket = 2 * k1
-    else:
-        # ---- Level 2: per-segment splitters ------------------------------
-        k2 = levels[1]
-        seg = _seg_ids(off1, n)
-        m2 = min(max(sampling.oversampling_factor(n_real) * k2, k2), 2048)
-        seg_rngs = jax.random.split(r2, nb1)
-        pos = jax.vmap(
-            lambda r, lo, hi: sampling.sample_indices(r, m2, lo, hi)
-        )(seg_rngs, off1[:-1], off1[1:])
-        svals = jnp.sort(jnp.take(keys, pos.reshape(-1), axis=0).reshape(nb1, m2), axis=-1)
-        spl2 = sampling.select_splitters(svals, k2)  # (nb1, k2-1)
-        local = classify_segmented(keys, seg, spl2, k2)
-        comp = seg * (2 * k2) + local
-        nb = nb1 * 2 * k2
-        arrays, offsets = stable_partition(comp, arrays, nb, _auto_tile(n, nb, cfg))
-        keys = arrays["k"]
-        pad_bucket = None  # pads land in an odd (equality) bucket automatically
+        return arrays, off1, nb1, pad_bucket
+    arrays, offsets, nb = segmented_level_pass(
+        arrays, off1, nb1, n_real, levels[1], cfg, r2
+    )
+    return arrays, offsets, nb, None  # pads now sit in an odd equality bucket
 
-    # ---- Base case + robustness fallback ---------------------------------
-    fb = _seg_ids(offsets, n)
+
+def bucket_violations(
+    offsets: jax.Array,
+    nb: int,
+    W: int,
+    pad_bucket: Optional[int] = None,
+    limit: Optional[jax.Array] = None,
+) -> jax.Array:
+    """True iff some non-trivial bucket exceeds W/2 (base-case precondition).
+
+    Equality buckets (odd ids) hold identical keys and never need sorting,
+    so their size is unbounded.  ``limit`` restricts the check to buckets
+    that intersect [0, limit) — partial sorts only care about those.
+    """
     sizes = jnp.diff(offsets)
     ids = jnp.arange(nb, dtype=jnp.int32)
     nontrivial = (ids % 2) == 0  # odd ids = equality buckets (all-equal)
     if pad_bucket is not None:
         nontrivial = nontrivial & (ids != pad_bucket)
-    violated = jnp.any(jnp.where(nontrivial, sizes, 0) > W // 2)
+    if limit is not None:
+        nontrivial = nontrivial & (offsets[:-1] < limit)
+    return jnp.any(jnp.where(nontrivial, sizes, 0) > W // 2)
+
+
+def _sort_padded(arrays: Any, n_real: int, cfg: SortConfig, levels: Sequence[int]) -> Any:
+    """Sort padded arrays dict (pads = sentinel keys at the tail)."""
+    n = arrays["k"].shape[0]
+    W = cfg.base_case
+
+    if not levels:
+        # Single window: plain stable base case (the paper's smallSort).
+        return stable_full_sort(arrays)
+
+    arrays, offsets, nb, pad_bucket = partition_passes(arrays, n_real, cfg, levels)
+
+    # ---- Base case + robustness fallback ---------------------------------
+    fb = segment_ids(offsets, n)
+    violated = bucket_violations(offsets, nb, W, pad_bucket)
 
     if cfg.fallback:
         return jax.lax.cond(
             violated,
-            _stable_full_sort,
-            lambda a: _base_case(a, fb, W),
+            stable_full_sort,
+            lambda a: base_case(a, fb, W),
             arrays,
         )
-    return _base_case(arrays, fb, W)
+    return base_case(arrays, fb, W)
 
 
 def ips4o_sort(
@@ -220,21 +319,9 @@ def ips4o_sort(
     if values is not None:
         arrays["v"] = values
 
-    W = cfg.base_case
-    unit = max(W, cfg.tile)
-    n_pad = -(-n // unit) * unit
-    levels = plan_levels(n_pad, cfg)
-    if n_pad != n:
-        pad_n = n_pad - n
-        sent = sampling.sentinel_for(keys.dtype)
-
-        def pad(a):
-            padding = [(0, pad_n)] + [(0, 0)] * (a.ndim - 1)
-            return jnp.pad(a, padding)
-
-        arrays = jax.tree.map(pad, arrays)
-        arrays["k"] = arrays["k"].at[n:].set(sent)
-
+    unit = max(cfg.base_case, cfg.tile)
+    arrays = pad_with_sentinel(arrays, unit)
+    levels = plan_levels(arrays["k"].shape[0], cfg)
     arrays = _sort_padded(arrays, n, cfg, levels)
 
     out_k = arrays["k"][:n]

@@ -8,8 +8,11 @@ contract the trainer relies on is:
   * sharded host feeding: ``global_batch`` rows are produced, each host
     materializes only its slice (here: one host = all rows);
   * **length bucketing via the paper's machinery**: documents are sorted by
-    length with ``ips4o_sort`` before packing, minimizing pad waste — the
-    data-pipeline instantiation of the sorting engine (DESIGN.md §3).
+    length through ``repro.ops`` before packing, minimizing pad waste — the
+    data-pipeline instantiation of the sorting engine (DESIGN.md §3).  The
+    argsort comes from the plan cache (``ops.get_sorter``), so repeated
+    packing calls at a fixed corpus size reuse one cached jitted sorter
+    (and pick up persisted tuned plans when present).
 """
 from __future__ import annotations
 
@@ -55,13 +58,12 @@ def pack_by_length(lengths: np.ndarray, seq_len: int):
     """
     import jax.numpy as jnp
 
-    from repro.core.ips4o import ips4o_sort
+    from repro.ops import get_sorter
 
     n = len(lengths)
-    keys, idx = ips4o_sort(
-        jnp.asarray(lengths, jnp.int32), jnp.arange(n, dtype=jnp.int32)
-    )
-    keys, idx = np.asarray(keys), np.asarray(idx)
+    lengths_np = np.asarray(lengths, np.int32)
+    idx = np.asarray(get_sorter(n, jnp.int32, op="argsort")(jnp.asarray(lengths_np)))
+    keys = lengths_np[idx]
     row_id = np.zeros(n, np.int32)
     offset = np.zeros(n, np.int32)
     # pack longest-first so fragmentation stays bounded

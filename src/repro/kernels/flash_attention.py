@@ -63,10 +63,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, seq: int,
 
     def body(j, carry):
         m, l, acc = carry
-        kb = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None))
-                     ).astype(jnp.float32)     # (bk, hd)
-        vb = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None))
-                     ).astype(jnp.float32)
+        # leading axis via a 1-sized dslice: a bare int index has no
+        # interpret-mode load-discharge rule in this jax version
+        kb = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(j * bk, bk), slice(None))
+                     )[0].astype(jnp.float32)  # (bk, hd)
+        vb = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(j * bk, bk), slice(None))
+                     )[0].astype(jnp.float32)
         s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())))  # (bq, bk)
         rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)

@@ -74,9 +74,16 @@ def _kernel(d_ref, bb_ref, a_in, a_out, w_ref, r_ref, st_ref, swap0, swap1, sem,
         # ---- refill swap buffer if empty (cyclic primary-bucket scan) ----
         @pl.when(st_ref[S_FILLED] == 0)
         def _fill():
+            # hoist the pointer reads out of the while_loop: SMEM scalars to
+            # values first (k is small/static), so the loop carries no ref
+            # effects — interpret-mode state discharge has no rule for a
+            # ref-reading `while`.
+            ws = jnp.stack([w_ref[i] for i in range(k)])
+            rs = jnp.stack([r_ref[i] for i in range(k)])
+
             def cond(s):
                 p, cnt = s
-                return (cnt < k) & (w_ref[p] >= r_ref[p])
+                return (cnt < k) & (ws[p] >= rs[p])
 
             def body(s):
                 p, cnt = s

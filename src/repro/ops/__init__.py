@@ -1,0 +1,43 @@
+"""repro.ops — sort-derived operations on the IPS4o engine (DESIGN.md §5).
+
+The paper positions IPS4o as a reusable engine ("the algorithm can also be
+used for data distribution and local sorting"); this package is that
+engine exposed as a library of jit-compatible operations instead of a
+single monolithic sort entry point:
+
+  sort / argsort      NaN-safe total-order sort (keyspace-encoded)
+  topk / bottomk      splitter-based partial sort: classify + partition
+                      once, base-case-sort only the rank-covering prefix
+  segmented_sort      batched independent segments in one composite pass
+  unique / run_length sort + equality-bucket boundary extraction
+  group_by            grouping via partition / Pallas kernel / full sort
+  keyspace            total-order uint bijection for float/int keys
+  PlanCache           (op, n, dtype) -> tuned, jitted, persisted callable
+
+Production call sites: ``serve.scheduler`` (bottomk), ``data.pipeline``
+(argsort via the plan cache), ``examples/moe_routing.py`` (group_by).
+"""
+from repro.core.ips4o import SortConfig
+from repro.ops import keyspace
+from repro.ops.groupby import Groups, group_by, run_length, unique
+from repro.ops.plan import PlanCache, default_cache, get_sorter
+from repro.ops.segmented import segmented_sort
+from repro.ops.sort import argsort, sort
+from repro.ops.topk import bottomk, topk
+
+__all__ = [
+    "SortConfig",
+    "keyspace",
+    "sort",
+    "argsort",
+    "topk",
+    "bottomk",
+    "segmented_sort",
+    "unique",
+    "run_length",
+    "group_by",
+    "Groups",
+    "PlanCache",
+    "default_cache",
+    "get_sorter",
+]

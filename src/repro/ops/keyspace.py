@@ -1,0 +1,87 @@
+"""Order-preserving bijections from sortable dtypes into unsigned-int keys.
+
+The IPS4o classifier compares keys against splitters with ``>`` / ``==``;
+that is a total order for ints and for floats *without* NaN, which is why
+``ips4o_sort`` documents a NaN limitation.  This module removes it for the
+``repro.ops`` layer (DESIGN.md §5.1): every supported dtype is bijected
+into the same-width unsigned integer space where ``<`` on the encoded keys
+equals the desired order on the originals:
+
+  * unsigned ints: identity;
+  * signed ints:   flip the sign bit (two's complement -> offset binary);
+  * floats:        the classic radix trick — negative values are bitwise
+    complemented, non-negative values get the sign bit set.  This orders
+    -inf < ... < -0.0 < +0.0 < ... < +inf, and (unlike IEEE ``<``) gives
+    -0.0 and +0.0 distinct, adjacent code points;
+  * NaNs (any sign, any payload) are canonicalized to the maximum code so
+    they sort to the tail as a single equivalence class (the equality
+    bucket of §4.4 then makes all-NaN runs free).  ``decode`` returns the
+    canonical quiet NaN for that class — NaN payloads do not round-trip,
+    everything else is bit-exact.
+
+The complement of an encoded key reverses the order (``~u`` sorts
+descending), which is how ``topk`` reuses the ascending partial sort.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["encode", "decode", "ordered_uint_dtype", "supported"]
+
+_UINT_FOR_BITS = {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32, 64: jnp.uint64}
+
+
+def ordered_uint_dtype(dtype):
+    """The unsigned dtype that ``encode`` maps ``dtype`` into."""
+    dtype = jnp.dtype(dtype)
+    bits = dtype.itemsize * 8
+    if bits not in _UINT_FOR_BITS:
+        raise TypeError(f"keyspace: unsupported key dtype {dtype}")
+    return jnp.dtype(_UINT_FOR_BITS[bits])
+
+
+def supported(dtype) -> bool:
+    dtype = jnp.dtype(dtype)
+    return (
+        jnp.issubdtype(dtype, jnp.integer) or jnp.issubdtype(dtype, jnp.floating)
+    ) and dtype.itemsize * 8 in _UINT_FOR_BITS
+
+
+def _sign_bit(udtype) -> jax.Array:
+    bits = jnp.dtype(udtype).itemsize * 8
+    return jnp.asarray(1 << (bits - 1), udtype)
+
+
+def encode(keys: jax.Array) -> jax.Array:
+    """Biject ``keys`` into unsigned ints such that uint ``<`` == key order."""
+    dtype = jnp.dtype(keys.dtype)
+    udtype = ordered_uint_dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.unsignedinteger):
+        return keys
+    if jnp.issubdtype(dtype, jnp.signedinteger):
+        u = jax.lax.bitcast_convert_type(keys, udtype)
+        return u ^ _sign_bit(udtype)
+    # floating
+    bits = jax.lax.bitcast_convert_type(keys, udtype)
+    sign = _sign_bit(udtype)
+    neg = (bits & sign) != 0
+    u = jnp.where(neg, ~bits, bits | sign)
+    umax = jnp.asarray(jnp.iinfo(udtype).max, udtype)
+    return jnp.where(jnp.isnan(keys), umax, u)
+
+
+def decode(u: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`encode` (NaNs come back as the canonical NaN)."""
+    dtype = jnp.dtype(dtype)
+    udtype = ordered_uint_dtype(dtype)
+    if u.dtype != udtype:
+        raise TypeError(f"keyspace: encoded dtype {u.dtype} != expected {udtype}")
+    if jnp.issubdtype(dtype, jnp.unsignedinteger):
+        return u
+    if jnp.issubdtype(dtype, jnp.signedinteger):
+        return jax.lax.bitcast_convert_type(u ^ _sign_bit(udtype), dtype)
+    sign = _sign_bit(udtype)
+    was_neg = (u & sign) == 0  # encoded negatives have the top bit clear
+    bits = jnp.where(was_neg, ~u, u ^ sign)
+    return jax.lax.bitcast_convert_type(bits, dtype)

@@ -1,0 +1,40 @@
+"""NaN-safe full sort and argsort on top of the IPS4o engine.
+
+These are thin compositions: biject keys into the ordered uint space
+(``ops.keyspace``), run ``ips4o_sort`` there (where ``>`` / ``==`` are a
+total order, so the documented NaN limitation disappears), and decode.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ips4o import SortConfig, ips4o_sort
+from repro.ops import keyspace
+
+__all__ = ["sort", "argsort"]
+
+
+def sort(keys: jax.Array, values: Any = None, *, cfg: SortConfig = SortConfig()):
+    """Sort ``keys`` ascending (NaNs last, -0.0 before +0.0), optionally
+    permuting a ``values`` pytree alongside.  Jit-compatible."""
+    enc = keyspace.encode(keys)
+    if values is None:
+        out = ips4o_sort(enc, cfg=cfg)
+        return keyspace.decode(out, keys.dtype)
+    out, vs = ips4o_sort(enc, values, cfg=cfg)
+    return keyspace.decode(out, keys.dtype), vs
+
+
+def argsort(keys: jax.Array, *, cfg: SortConfig = SortConfig()) -> jax.Array:
+    """Indices that sort ``keys`` ascending: ``keys[argsort(keys)]`` is
+    sorted.  The index payload rides the existing values-pytree threading;
+    ties are in arbitrary (but deterministic) order."""
+    n = keys.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if n <= 1:
+        return idx
+    _, order = ips4o_sort(keyspace.encode(keys), idx, cfg=cfg)
+    return order

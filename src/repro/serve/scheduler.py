@@ -1,6 +1,11 @@
 """Batch scheduler: orders admitted requests by remaining length with the
-paper's sorter (IPS4o as a library — DESIGN.md §3), so continuous batches
-retire together and padding waste is minimized."""
+paper's engine (IPS4o as a library — DESIGN.md §3), so continuous batches
+retire together and padding waste is minimized.
+
+Admission is a rank-k query, not a full sort: only ``batch_size`` requests
+leave the queue per call, so the scheduler uses ``repro.ops.bottomk`` —
+the splitter-based partial sort that base-case-sorts just the buckets
+covering the admitted prefix (DESIGN.md §5.2)."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -9,7 +14,7 @@ from typing import List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ips4o import ips4o_sort
+from repro.ops import bottomk
 
 __all__ = ["Request", "Scheduler"]
 
@@ -37,17 +42,17 @@ class Scheduler:
     def next_batch(self) -> List[Request]:
         """Admit up to batch_size requests, shortest-remaining-first.
 
-        Sort keyed on remaining length via ips4o_sort — requests that retire
-        together sit together, so slot churn (and therefore prefill restarts)
-        is minimized.
+        Rank-k selection on remaining length via ``ops.bottomk`` — requests
+        that retire together sit together, so slot churn (and therefore
+        prefill restarts) is minimized, and only the admitted prefix is
+        ever fully sorted.
         """
         if not self.queue:
             return []
         keys = jnp.asarray([r.remaining for r in self.queue], jnp.int32)
-        idx = jnp.arange(len(self.queue), dtype=jnp.int32)
-        _, order = ips4o_sort(keys, idx)
+        _, order = bottomk(keys, min(self.batch_size, len(self.queue)))
         order = np.asarray(order)
-        batch = [self.queue[i] for i in order[: self.batch_size]]
-        picked = set(int(order[i]) for i in range(min(self.batch_size, len(order))))
+        batch = [self.queue[i] for i in order]
+        picked = set(int(i) for i in order)
         self.queue = [r for i, r in enumerate(self.queue) if i not in picked]
         return batch

@@ -3,6 +3,9 @@ paper's distribution machinery under arbitrary routing patterns."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.moe import expert_capacity, sort_dispatch

@@ -14,6 +14,14 @@ from repro.launch.hlo_cost import analyze_hlo
 N, STEPS = 128, 10
 
 
+def _xla_flops(compiled) -> float:
+    """Compiled.cost_analysis() returns a dict in new jax, [dict] in older."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca["flops"])
+
+
 def _scan_fn(x):
     def body(c, _):
         return (c @ c) * 2.0, None
@@ -41,7 +49,7 @@ def test_trip_count_correction(compiled_pair):
     hu = analyze_hlo(unrolled.as_text())
     # XLA's raw cost_analysis counts the scan body once — the whole reason
     # this module exists.  Our analyzer must NOT.
-    raw = float(scan.cost_analysis()["flops"])
+    raw = _xla_flops(scan)
     assert raw < hs.flops / 2, "scan body no longer undercounted? re-check"
     assert hs.flops == pytest.approx(hu.flops, rel=0.02)
     assert STEPS in hs.trips.values()
@@ -50,7 +58,7 @@ def test_trip_count_correction(compiled_pair):
 def test_matches_xla_on_unrolled(compiled_pair):
     _, unrolled = compiled_pair
     hu = analyze_hlo(unrolled.as_text())
-    xla = float(unrolled.cost_analysis()["flops"])
+    xla = _xla_flops(unrolled)
     assert hu.flops == pytest.approx(xla, rel=0.02)
     # dot convention: 2*M*N*K
     assert hu.flops >= STEPS * 2 * N**3
