@@ -8,13 +8,14 @@ compiled dry-run instead of wall clocks.
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import Any, Callable, Dict, Iterable, List
 
 import jax
 import numpy as np
 
-__all__ = ["bench", "Row", "emit", "check_sorted"]
+__all__ = ["bench", "Row", "emit", "emit_json", "check_sorted"]
 
 Row = Dict[str, Any]
 
@@ -41,3 +42,17 @@ def emit(rows: Iterable[Row], header: List[str]) -> None:
     print(",".join(header))
     for r in rows:
         print(",".join(str(r.get(h, "")) for h in header))
+
+
+def emit_json(all_rows: Dict[str, List[Row]], path: str) -> None:
+    """Write every bench's rows to one machine-readable JSON file, so the
+    perf trajectory is trackable per PR (CI archives the artifact)."""
+    payload = {
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "benches": all_rows,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+    print(f"wrote {path}")

@@ -9,7 +9,9 @@
   sort_ops           DESIGN.md §5     repro.ops: topk vs full sort, group_by
 
 ``python -m benchmarks.run [--quick] [--only NAME]`` prints one CSV block
-per table plus a Table-1-style summary.
+per table plus a Table-1-style summary, and writes every row to a
+machine-readable ``BENCH_sort.json`` (``--json PATH`` overrides) so each
+PR's perf trajectory is diffable.
 """
 from __future__ import annotations
 
@@ -32,11 +34,13 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default="BENCH_sort.json",
+                    help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
 
     import importlib
 
-    from benchmarks.common import emit
+    from benchmarks.common import emit, emit_json
 
     failures = 0
     all_rows = {}
@@ -58,6 +62,9 @@ def main(argv=None) -> int:
         if rows:
             emit(rows, list(rows[0].keys()))
         print(f"-- {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
+
+    if args.json and all_rows:
+        emit_json(all_rows, args.json)
 
     # Table-1-style summary: our speedups vs library sort
     dist = all_rows.get("sort_distributions")

@@ -3,25 +3,58 @@
 IS4o (ours, in-place via donation) vs s3-sort (out-of-place samplesort,
 the paper's non-in-place baseline) vs jnp.sort (XLA's library sort — the
 std::sort role).  ns/element, f32 and u32 keys.
+
+IS4o runs once per partition engine ("xla" | "pallas"); each engine row
+also carries a partition-pass-only timing (``part_ns_per_elem``) — the
+classify+distribute phase is where the engines differ, the base case is
+shared.  A final ``plan`` row per (dtype, smallest n) reports which engine
+the PlanCache autotune sweep selects on this machine.  Off-TPU the Pallas
+kernels run in interpret mode, so their rows are restricted to
+n <= _PALLAS_MAX (larger sizes would only time the interpreter) — the
+skipped rows are announced, not silent.
 """
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ips4o import SortConfig, ips4o_sort
+from repro.core.ips4o import (
+    SortConfig, ips4o_sort, pad_with_sentinel, partition_passes, plan_levels,
+)
 from repro.core.s3sort import s3_sort
+from repro.ops.plan import PlanCache
 
 from benchmarks.common import Row, bench, check_sorted
 
 SIZES = [1 << 16, 1 << 18, 1 << 20, 1 << 22]
 DTYPES = [jnp.float32, jnp.uint32]
+_PALLAS_MAX = 1 << 18  # off-TPU interpret-mode ceiling for pallas rows
+
+
+def _partition_only(x: jax.Array, cfg: SortConfig):
+    """Just the level passes (classify + distribute) — the engine seam."""
+    arrays = pad_with_sentinel({"k": x}, max(cfg.base_case, cfg.tile))
+    levels = plan_levels(arrays["k"].shape[0], cfg)
+    if not levels:
+        return arrays["k"], None
+    out, off, _, _ = partition_passes(arrays, x.shape[0], cfg, levels)
+    return out["k"], off
+
+
+def _engines(n: int) -> list:
+    if jax.default_backend() == "tpu" or n <= _PALLAS_MAX:
+        return ["xla", "pallas"]
+    print(f"# n={n}: pallas rows skipped (interpret mode past {_PALLAS_MAX})")
+    return ["xla"]
 
 
 def run(quick: bool = False):
     sizes = SIZES[:2] if quick else SIZES
     rows: list[Row] = []
+    plan_cache = PlanCache(path=None)  # the real per-machine cache
     for dtype in DTYPES:
         for n in sizes:
             rng = np.random.default_rng(42)
@@ -31,23 +64,42 @@ def run(quick: bool = False):
                 x = jnp.asarray(
                     rng.integers(0, 2**32 - 1, n, dtype=np.uint32)
                 )
-            algos = {
-                "is4o": jax.jit(lambda a: ips4o_sort(a, cfg=SortConfig())),
-                "s3sort": jax.jit(lambda a: s3_sort(a, cfg=SortConfig())),
-                "jnp.sort": jax.jit(jnp.sort),
-            }
-            for name, f in algos.items():
+            algos = {}
+            for engine in _engines(n):
+                cfg = SortConfig(engine=engine)
+                algos[("is4o", engine)] = (
+                    jax.jit(partial(ips4o_sort, cfg=cfg)),
+                    jax.jit(partial(_partition_only, cfg=cfg)),
+                )
+            algos[("s3sort", "-")] = (
+                jax.jit(lambda a: s3_sort(a, cfg=SortConfig())), None)
+            algos[("jnp.sort", "-")] = (jax.jit(jnp.sort), None)
+
+            for (name, engine), (f, fpart) in algos.items():
                 check_sorted(f(x), x)
                 t = bench(lambda f=f: f(x))
-                rows.append({
-                    "bench": "sequential", "algo": name,
+                row = {
+                    "bench": "sequential", "algo": name, "engine": engine,
                     "dtype": jnp.dtype(dtype).name, "n": n,
                     "ns_per_elem": round(t / n * 1e9, 2),
                     "s_per_call": round(t, 5),
-                })
+                }
+                if fpart is not None:
+                    tp = bench(lambda fpart=fpart: fpart(x))
+                    row["part_ns_per_elem"] = round(tp / n * 1e9, 2)
+                rows.append(row)
+
+        # which engine does the tuned plan pick at the smallest size?
+        n0 = sizes[0]
+        chosen = plan_cache.config_for("sort", n0, dtype, tune=True)
+        rows.append({
+            "bench": "sequential", "algo": "plan", "engine": chosen.engine,
+            "dtype": jnp.dtype(dtype).name, "n": n0,
+        })
     return rows
 
 
 if __name__ == "__main__":
     from benchmarks.common import emit
-    emit(run(), ["bench", "algo", "dtype", "n", "ns_per_elem", "s_per_call"])
+    emit(run(), ["bench", "algo", "engine", "dtype", "n", "ns_per_elem",
+                 "s_per_call", "part_ns_per_elem"])

@@ -59,12 +59,18 @@ def main() -> int:
         out1 = engine.generate(prompts, args.new)
     print(f"generated {out1.shape} tokens; first row: {np.asarray(out1[0,:8])}...")
 
-    # determinism check (greedy): regenerate from a fresh cache
+    # determinism check (greedy): the SAME engine back-to-back — generate()
+    # reinitializes the donated KV cache, so a second call can't attend
+    # over the first call's stale keys/values
+    with mesh:
+        out2 = engine.generate(prompts, args.new)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    # ... and across fresh engine instances
     engine2 = Engine(cfg, scfg, mesh, params)
     with mesh:
-        out2 = engine2.generate(prompts, args.new)
-    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
-    print("greedy decode deterministic across engine instances — OK")
+        out3 = engine2.generate(prompts, args.new)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out3))
+    print("greedy decode deterministic across calls and engine instances — OK")
     return 0
 
 

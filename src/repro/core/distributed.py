@@ -33,7 +33,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import sampling
-from repro.core.ips4o import SortConfig, ips4o_sort
+from repro.core.ips4o import SortConfig, ips4o_sort, resolve_engine
 from repro.core.partition import stable_partition
 
 __all__ = ["distributed_sort", "make_distributed_sorter"]
@@ -113,7 +113,11 @@ def _local_shard_sort(
     to_part = {"k": keys}
     if values is not None:
         to_part["v"] = values
-    arrays, offsets = stable_partition(dest, to_part, d, tile)
+    # cfg.engine rides into the stripe partition too: with d buckets the
+    # counting-rank kernel is far under its VMEM one-hot cap
+    arrays, offsets = stable_partition(
+        dest, to_part, d, tile, engine=resolve_engine(cfg, n_local, keys.dtype)
+    )
     part = arrays["k"]
     counts = jnp.diff(offsets)  # (d,)
 

@@ -22,6 +22,19 @@ Structure (see DESIGN.md §4 for the full mapping from the paper):
 The returned permutation is value-exact vs. ``ref_sort`` (stable) for keys;
 payload association is exact per element (the base-case window sort is not
 stable across equal (bucket, key) pairs, like the paper's base case).
+
+Keys must form a total order under ``>`` / ``==`` at this level (raw NaNs
+are rejected by that contract); the ``repro.ops`` entry points remove the
+limitation by bijecting keys into the ordered uint keyspace
+(``ops/keyspace.py``) before calling in, so NaN / -0.0 handling is their
+concern, not this module's.
+
+The classify+partition hot loops run on one of two engines
+(``SortConfig.engine``): "xla" (dense jnp classification + per-tile-argsort
+partition) or "pallas" (the fused classify+histogram kernel and the
+counting-rank placement kernel — the paper's §4.1/§4.2 loops as real
+kernels); "auto" lets the plan cache / backend pick.  Both engines are
+bit-exact interchangeable (DESIGN.md §4.8).
 """
 from __future__ import annotations
 
@@ -35,7 +48,7 @@ import jax.numpy as jnp
 
 from repro.core import sampling
 from repro.core.classifier import classify, classify_segmented
-from repro.core.partition import stable_partition
+from repro.core.partition import ENGINES, stable_partition
 
 __all__ = [
     "SortConfig",
@@ -43,6 +56,7 @@ __all__ = [
     "is4o_sort",
     "plan_levels",
     "make_sorter",
+    "resolve_engine",
     # level-pass internals, consumed by ``repro.ops`` (DESIGN.md §5)
     "pad_with_sentinel",
     "level_pass",
@@ -66,6 +80,7 @@ class SortConfig:
     max_sample: int = 8192         # cap on per-level sample size
     seed: int = 0xC0FFEE
     fallback: bool = True          # robustness fallback via lax.cond
+    engine: str = "xla"            # partition engine: "xla" | "pallas" | "auto"
 
 
 def plan_levels(n: int, cfg: SortConfig) -> List[int]:
@@ -92,6 +107,40 @@ def _auto_tile(n: int, nb: int, cfg: SortConfig) -> int:
     while (n // tile) * nb > (1 << 26) and tile < cfg.base_case:
         tile *= 2
     return tile
+
+
+# Largest bucket count the counting-rank kernel takes on: its per-tile
+# one-hot is (rows*128, nb) in VMEM, so the segmented pass (nb = seg*2k)
+# must drop back to the XLA engine past this.
+_PALLAS_NB_MAX = 1024
+
+
+def resolve_engine(cfg: SortConfig, n: int, dtype=None) -> str:
+    """Concrete engine for this (cfg, n): "auto" consults the plan cache's
+    persisted choice for a same-shape sort, else picks by backend (the
+    kernels lower natively only on TPU)."""
+    if cfg.engine in ENGINES:
+        return cfg.engine
+    if cfg.engine != "auto":
+        raise ValueError(
+            f"unknown engine {cfg.engine!r}; expected one of {ENGINES + ('auto',)}"
+        )
+    if dtype is not None:
+        from repro.ops.plan import default_cache  # lazy: ops layers on core
+
+        hint = default_cache.engine_hint(n, dtype)
+        if hint is not None:
+            return hint
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _classify_rows(n: int) -> int:
+    """Largest kernel row count whose tile (rows*128) divides n, or 0 if
+    n is not 128-aligned (caller then stays on the XLA classifier)."""
+    for rows in (32, 16, 8, 4, 2, 1):
+        if n % (rows * 128) == 0:
+            return rows
+    return 0
 
 
 def segment_ids(offsets: jax.Array, n: int) -> jax.Array:
@@ -179,18 +228,53 @@ def level_pass(
 ) -> Tuple[Any, jax.Array, int, int]:
     """One *global* level pass: sample -> branchless classify -> stable
     block partition.  Pads (positions >= n_real) go to a dedicated final
-    bucket.  Returns (arrays, offsets, nb, pad_bucket) with nb = 2k + 1."""
+    bucket.  Returns (arrays, offsets, nb, pad_bucket) with nb = 2k + 1.
+
+    On the "pallas" engine the classify+histogram and the rank placement
+    run as the fused kernels (``kernels.classify``,
+    ``kernels.dispatch_rank.partition_ranks``); bucket ids, offsets, and
+    the permutation are bit-identical to the "xla" engine.
+    """
     keys = arrays["k"]
     n = keys.shape[0]
     m1 = min(max(sampling.oversampling_factor(n_real) * k, k), cfg.max_sample, n_real)
     sample_pos = jax.random.randint(rng, (m1,), 0, n_real)
     sample = jnp.sort(jnp.take(keys, sample_pos, axis=0))
     spl = sampling.select_splitters(sample, k)
-    b = classify(keys, spl, k)
-    is_pad = jnp.arange(n, dtype=jnp.int32) >= n_real
+
     nb = 2 * k + 1  # +1: dedicated pad bucket (the overflow-block analogue)
-    b = jnp.where(is_pad, 2 * k, b)
-    arrays, off = stable_partition(b, arrays, nb, _auto_tile(n, nb, cfg))
+    pad_n = n - n_real
+    engine = resolve_engine(cfg, n, keys.dtype)
+    # the fused classify kernel needs a 128-aligned n; the counting-rank
+    # partition self-pads, so a pallas engine keeps its partition either way
+    rows = _classify_rows(n) if engine == "pallas" else 0
+    interpret = jax.default_backend() != "tpu"
+
+    off = None
+    if rows:
+        from repro.kernels.classify import classify_histogram
+
+        b, hist = classify_histogram(keys, spl, k=k, rows=rows, interpret=interpret)
+        # Bucket offsets come from the fused per-tile histogram.  Pads are
+        # all sentinel keys, so the kernel put every one of them in a single
+        # bucket — read it off the first pad position and move the count to
+        # the dedicated pad bucket, mirroring the positional reroute below.
+        totals = hist.sum(axis=0)
+        if pad_n:
+            totals = totals.at[b[n_real]].add(-pad_n)
+        totals = jnp.concatenate(
+            [totals, jnp.full((1,), pad_n, jnp.int32)]
+        ).astype(jnp.int32)
+        off = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(totals)])
+    else:
+        b = classify(keys, spl, k)
+    if pad_n:
+        is_pad = jnp.arange(n, dtype=jnp.int32) >= n_real
+        b = jnp.where(is_pad, 2 * k, b)
+    arrays, off = stable_partition(
+        b, arrays, nb, _auto_tile(n, nb, cfg), engine=engine,
+        offsets=off, interpret=interpret,
+    )
     return arrays, off, nb, 2 * k
 
 
@@ -211,6 +295,11 @@ def segmented_level_pass(
     ``seg_offsets`` (num_seg+1,) bounds each segment; segments keep their
     index ranges (the composite id is monotone in segment and the partition
     is stable).  Returns (arrays, offsets, nb) with nb = num_seg * 2k.
+
+    Classification stays on the XLA path (the composite-bucket classifier
+    has no fused kernel yet); the *partition* honours ``cfg.engine`` as
+    long as nb fits the counting kernel's VMEM one-hot (past
+    ``_PALLAS_NB_MAX`` composite buckets it drops back to "xla").
     """
     keys = arrays["k"]
     n = keys.shape[0]
@@ -225,7 +314,12 @@ def segmented_level_pass(
     local = classify_segmented(keys, seg, spl, k)
     comp = seg * (2 * k) + local
     nb = num_seg * 2 * k
-    arrays, offsets = stable_partition(comp, arrays, nb, _auto_tile(n, nb, cfg))
+    engine = resolve_engine(cfg, n, keys.dtype)
+    if engine == "pallas" and nb > _PALLAS_NB_MAX:
+        engine = "xla"
+    arrays, offsets = stable_partition(
+        comp, arrays, nb, _auto_tile(n, nb, cfg), engine=engine
+    )
     return arrays, offsets, nb
 
 
@@ -306,8 +400,11 @@ def ips4o_sort(
     """Sort ``keys`` (n,) ascending; optionally permute a ``values`` pytree
     (leaves with leading dim n) alongside.  Jit-compatible; static shapes.
 
-    NaN keys are not supported (documented limitation — comparisons against
-    splitters are not a total order under NaN; canonicalize first).
+    Keys must form a total order under ``>`` / ``==``, which raw float NaNs
+    do not — use the ``repro.ops`` entry points (``ops.sort`` etc.), which
+    biject keys through ``ops/keyspace.py`` first and are NaN-safe (NaNs
+    sort last, -0.0 before +0.0), or canonicalize NaNs yourself before
+    calling this low-level engine directly.
     """
     n = keys.shape[0]
     if keys.ndim != 1:

@@ -17,19 +17,50 @@ The paper's three partition phases map to:
 The resulting permutation is *stable* (tiles in order, stable grouping within
 a tile), which the higher levels rely on.
 
+Two interchangeable engines produce that same permutation (DESIGN.md §2):
+
+  "xla"     per-tile stable ``argsort`` grouping + prefix sums + one gather
+            (O(tile·log tile) comparison sort inside the distribution pass);
+  "pallas"  counting-based rank placement: the fused
+            ``kernels.dispatch_rank.partition_ranks`` kernel computes
+            dest[i] = offsets[b_i] + (#equal-bucket elements before i) with
+            running VMEM counters across the sequential grid — branchless,
+            no comparison sort, exactly the paper's "maintain bucket
+            pointers" discipline.  The payload move is a scatter by dest;
+            when the caller can guarantee block-homogeneous buckets
+            (``partition_blocks``) the faithful in-place block-permutation
+            kernel carries the move instead.
+
+Both engines emit the *identical* stable permutation, so they are
+bit-exact interchangeable — the plan cache picks per (n, dtype, hardware).
+
 This module is also the engine of MoE token dispatch (``repro.models.moe``):
 there the "classifier" output is the router's expert id.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["tile_histogram", "stable_partition", "partition_permutation"]
+__all__ = [
+    "tile_histogram",
+    "stable_partition",
+    "partition_permutation",
+    "partition_ranks_pallas",
+    "partition_blocks",
+    "ENGINES",
+]
 
 Pytree = Any
+
+ENGINES = ("xla", "pallas")
+
+
+def _default_interpret() -> bool:
+    """Pallas kernels lower natively on TPU; everywhere else interpret."""
+    return jax.default_backend() != "tpu"
 
 
 def tile_histogram(bucket_tiles: jax.Array, nb: int) -> jax.Array:
@@ -85,13 +116,119 @@ def partition_permutation(
     return perm, offsets
 
 
+def partition_ranks_pallas(
+    bucket: jax.Array,
+    offsets: jax.Array,
+    nb: int,
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Per-element stable counting destination via the Pallas rank kernel.
+
+    ``offsets`` is the (nb+1,) bucket-boundary array (only the exclusive
+    prefix ``offsets[:-1]`` is consumed).  Returns dest (n,) int32 such that
+    scattering ``a[i] -> dest[i]`` reproduces the stable partition.
+    """
+    from repro.kernels.dispatch_rank import partition_ranks
+
+    if interpret is None:
+        interpret = _default_interpret()
+    return partition_ranks(
+        bucket.astype(jnp.int32), offsets[:-1], nb=nb, interpret=interpret
+    )
+
+
 def stable_partition(
-    bucket: jax.Array, arrays: Pytree, nb: int, tile: int
+    bucket: jax.Array,
+    arrays: Pytree,
+    nb: int,
+    tile: int,
+    engine: str = "xla",
+    *,
+    offsets: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
 ) -> Tuple[Pytree, jax.Array]:
     """Stably reorder every leaf of ``arrays`` so buckets are contiguous.
 
-    Returns (reordered pytree, offsets (nb+1,)).
+    ``engine`` selects how the stable placement is computed:
+
+      "xla"     per-tile stable argsort + prefix sums + gather (default);
+      "pallas"  counting-rank kernel + scatter — no comparison sort inside
+                the distribution pass.  ``offsets`` may be supplied when the
+                caller already has the bucket boundaries (e.g. from the
+                fused classify+histogram kernel), saving the bincount.
+
+    Both engines produce bit-identical results.  Returns
+    (reordered pytree, offsets (nb+1,)).
     """
+    if engine == "pallas":
+        if offsets is None:
+            totals = jnp.bincount(bucket, length=nb)
+            offsets = jnp.concatenate(
+                [jnp.zeros((1,), jnp.int32), jnp.cumsum(totals).astype(jnp.int32)]
+            )
+        dest = partition_ranks_pallas(bucket, offsets, nb, interpret=interpret)
+        out = jax.tree.map(
+            lambda a: jnp.zeros_like(a).at[dest].set(a, mode="promise_in_bounds"),
+            arrays,
+        )
+        return out, offsets
+    if engine != "xla":
+        raise ValueError(f"unknown partition engine {engine!r}; expected {ENGINES}")
     perm, offsets = partition_permutation(bucket, nb, tile)
     out = jax.tree.map(lambda a: jnp.take(a, perm, axis=0), arrays)
     return out, offsets
+
+
+def partition_blocks(
+    arrays: Pytree,
+    block_bucket: jax.Array,
+    nb: int,
+    block_elems: int,
+    *,
+    interpret: Optional[bool] = None,
+) -> Tuple[Pytree, jax.Array]:
+    """Group *block-homogeneous* data with the in-place Pallas kernel.
+
+    The faithful payload move (paper §4.2): when the caller guarantees each
+    consecutive run of ``block_elems`` elements shares one bucket (the
+    block_bucket (N,) array gives that bucket per block — e.g. MoE capacity
+    blocks, distributed chunk exchange), whole blocks move HBM-in-place via
+    ``kernels.permute_inplace``.  The kernel's moves depend only on
+    (block_bucket, boundaries), so applying it per leaf yields one
+    consistent permutation across the pytree.  The kernel path requires
+    every leaf to be 1-D with ``block_elems`` a multiple of 128; if any
+    leaf is ineligible the whole pytree falls back to a gather by the
+    stable block order (one decision for all leaves — the kernel's
+    permutation is not the stable one, so the two moves must never mix
+    within a pytree).
+
+    Returns (grouped pytree, (nb+1,) *block*-boundary offsets).
+    """
+    from repro.kernels.permute_inplace import permute_blocks_inplace
+
+    if interpret is None:
+        interpret = _default_interpret()
+    hist = jnp.bincount(block_bucket, length=nb)
+    d = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(hist).astype(jnp.int32)]
+    )
+
+    leaves = jax.tree.leaves(arrays)
+    kernel_ok = block_elems % 128 == 0 and all(
+        a.ndim == 1 and a.shape[0] % block_elems == 0 for a in leaves
+    )
+
+    if kernel_ok:
+        move = lambda a: permute_blocks_inplace(
+            a, block_bucket, d, k=nb, block_elems=block_elems, interpret=interpret
+        )
+    else:
+        block_order = jnp.argsort(block_bucket, stable=True)
+        nblocks = block_bucket.shape[0]
+
+        def move(a):
+            blocks = a.reshape((nblocks, block_elems) + a.shape[1:])
+            return jnp.take(blocks, block_order, axis=0).reshape(a.shape)
+
+    return jax.tree.map(move, arrays), d

@@ -13,6 +13,35 @@ import numpy as np
 __all__ = ["DISTRIBUTIONS", "make_input", "make_payload", "ELEMENT_TYPES"]
 
 
+def _clamp_to_int(x: np.ndarray, dtype) -> np.ndarray:
+    """Clamp a float array into an integer dtype's range, in integer space.
+
+    ``np.minimum(x, iinfo(int64).max)`` is wrong for 64-bit targets: the
+    bound is not exactly representable in float64, rounds *up* to 2^63, and
+    the later cast wraps negative.  Compare against the rounded-up float
+    bound instead and substitute the exact integer max for everything at or
+    above it; values strictly below 2^63 cast safely.
+    """
+    info = np.iinfo(dtype)
+    fmax = np.float64(info.max)  # may round up (int64: 2^63 exactly)
+    over = x >= fmax
+    under = x <= np.float64(info.min)
+    safe = np.where(over | under, 0.0, x).astype(dtype)
+    return np.where(over, info.max, np.where(under, info.min, safe)).astype(dtype)
+
+
+def _fit_int(vals: np.ndarray, n: int, dtype) -> np.ndarray:
+    """Cast values in [0, n) to ``dtype``, folding into the dtype's range
+    first when n exceeds it (instead of silently wrapping, e.g. negative
+    for int16 keys with n = 10^6)."""
+    if np.issubdtype(dtype, np.floating):
+        return vals.astype(dtype)
+    info = np.iinfo(dtype)
+    if n - 1 > int(info.max):
+        vals = vals % np.uint64(int(info.max) + 1)
+    return vals.astype(dtype)
+
+
 def _uniform(rng, n, dtype):
     if np.issubdtype(dtype, np.floating):
         return rng.random(n).astype(dtype)
@@ -23,7 +52,7 @@ def _exponential(rng, n, dtype):
     x = rng.exponential(size=n)
     if np.issubdtype(dtype, np.floating):
         return x.astype(dtype)
-    return np.minimum(x * (1 << 20), np.iinfo(dtype).max).astype(dtype)
+    return _clamp_to_int(x * (1 << 20), dtype)
 
 
 def _almost_sorted(rng, n, dtype):
@@ -36,17 +65,18 @@ def _almost_sorted(rng, n, dtype):
 
 
 def _root_dup(rng, n, dtype):
-    return (np.arange(n) % max(1, int(np.floor(np.sqrt(n))))).astype(dtype)
+    vals = np.arange(n, dtype=np.uint64) % max(1, int(np.floor(np.sqrt(n))))
+    return _fit_int(vals, n, dtype)
 
 
 def _two_dup(rng, n, dtype):
     i = np.arange(n, dtype=np.uint64)
-    return ((i * i + n // 2) % n).astype(dtype)
+    return _fit_int((i * i + n // 2) % n, n, dtype)
 
 
 def _eight_dup(rng, n, dtype):
     i = np.arange(n, dtype=np.uint64)
-    return (((i**8) + n // 2) % n).astype(dtype)
+    return _fit_int(((i**8) + n // 2) % n, n, dtype)
 
 
 def _sorted(rng, n, dtype):

@@ -9,11 +9,16 @@ predictor and hates serialized gathers; the idiomatic equivalent of
 "branch-free" is "lane-parallel dense compare": we classify a whole
 (rows, 128) tile against **all** k-1 splitters with broadcast compares,
 
-    j  = sum_i (key > s_i)          (the rank of the key among splitters)
-    eq = any_i (key == s_i)         (equality-bucket test, paper §4.4)
+    j  = sum_i (key > u_i)          (the rank of the key among splitters)
+    eq = any_i (key == u_i)         (equality-bucket test, paper §4.4)
     bucket = 2*j + eq
 
-which is mathematically identical to the tree descent (j = |{s : s < key}|)
+where u = splitters + the dtype sentinel (the paper's s_k = +inf upper
+splitter of the last bucket — comparing against it leaves j unchanged but
+makes keys equal to the sentinel land in the last *equality* bucket,
+exactly like the tree descent's ``e == upper_j`` test),
+
+and which is mathematically identical to the tree descent (j = |{s : s < key}|)
 but runs as k dense VPU ops with zero gathers and zero divergence.  The
 per-tile histogram (the paper's "count elements per bucket as a side effect
 of maintaining buffer blocks") is fused into the same VMEM pass via a
@@ -32,6 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.sampling import sentinel_for
+
 __all__ = ["classify_histogram"]
 
 LANES = 128
@@ -39,10 +46,12 @@ LANES = 128
 
 def _kernel(keys_ref, spl_ref, bucket_ref, hist_ref, *, k: int, nb: int):
     keys = keys_ref[...]  # (rows, 128)
-    spl = spl_ref[...]  # (1, k-1)
+    spl = spl_ref[...]  # (1, k): k-1 splitters + the dtype sentinel
     kf = keys[:, :, None]  # (rows, 128, 1)
-    sf = spl[0][None, None, :]  # (1, 1, k-1)
-    j = jnp.sum((kf > sf).astype(jnp.int32), axis=-1)
+    sf = spl[0][None, None, :]  # (1, 1, k)
+    # j counts only the k-1 real splitters (a key above the sentinel, e.g.
+    # +inf, must still land in bucket k-1); eq compares against all k uppers.
+    j = jnp.sum((kf > sf[..., : k - 1]).astype(jnp.int32), axis=-1)
     eq = jnp.any(kf == sf, axis=-1).astype(jnp.int32)
     bucket = 2 * j + eq
     bucket_ref[...] = bucket
@@ -73,14 +82,20 @@ def classify_histogram(
     num_tiles = n // tile
     nb = 2 * k
     keys2 = keys.reshape(num_tiles * rows, LANES)
-    spl2 = splitters.reshape(1, k - 1)
+    # Append the dtype sentinel as the upper splitter of the last bucket: it
+    # never changes j (no key is > it) but keys *equal* to it get eq = 1 and
+    # land in equality bucket 2(k-1)+1, matching the tree classifier.
+    upper = jnp.concatenate(
+        [splitters, jnp.full((1,), sentinel_for(splitters.dtype), splitters.dtype)]
+    )
+    spl2 = upper.reshape(1, k)
 
     bucket, hist = pl.pallas_call(
         functools.partial(_kernel, k=k, nb=nb),
         grid=(num_tiles,),
         in_specs=[
             pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((1, k - 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((rows, LANES), lambda i: (i, 0)),

@@ -1,14 +1,25 @@
-"""Pallas TPU kernel: fused MoE dispatch ranking (IPS4o distribution as EP).
+"""Pallas TPU kernels: fused counting-rank placement (IPS4o distribution).
 
 Token->expert dispatch is the paper's distribution problem with the router
-as classifier (DESIGN.md §3).  This kernel fuses, in ONE pass over the
-token stream, what XLA would otherwise do with sort+cumsum+scatter chains:
+as classifier (DESIGN.md §3).  These kernels fuse, in ONE pass over the
+element stream, what XLA would otherwise do with sort+cumsum+scatter chains:
 
-  dest[i] = expert_start[e_i] + (#tokens with expert e_i before i)
+  dest[i] = start[b_i] + (#elements with bucket b_i before i)
 
-The cross-tile running counters live in SMEM scratch and persist across the
-sequential TPU grid — the same "running bucket pointers on one core" idea as
-the block permutation kernel (§4.2), at token granularity.
+i.e. the *stable* counting placement — rank = prefix count of equal-bucket
+lanes, branchless, no comparison sort anywhere in the distribution pass.
+The cross-tile running counters persist across the sequential TPU grid —
+the same "running bucket pointers on one core" idea as the block
+permutation kernel (§4.2), at element granularity.
+
+Two variants:
+
+  * ``dispatch_ranks``: E small (MoE experts) — counters are SMEM scalars,
+    the per-bucket base lookup is an unrolled scalar loop.
+  * ``partition_ranks``: nb up to hundreds of buckets (the sort hot path's
+    2k+1) — counters are a VMEM (1, nb) vector and the base lookup is a
+    one-hot contraction, so nothing unrolls over nb.  This is the "pallas"
+    partition engine of ``core.partition.stable_partition``.
 """
 from __future__ import annotations
 
@@ -19,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["dispatch_ranks"]
+__all__ = ["dispatch_ranks", "partition_ranks"]
 
 LANES = 128
 
@@ -88,3 +99,68 @@ def dispatch_ranks(
         interpret=interpret,
     )(expert_start, eid2)
     return dest.reshape(n)
+
+
+def _rank_kernel(start_ref, bid_ref, dest_ref, run_ref, *, nb: int, rows: int):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init():
+        run_ref[...] = jnp.zeros((1, nb), jnp.int32)
+
+    bid = bid_ref[...]  # (rows, 128)
+    flat = bid.reshape(rows * LANES, 1)
+    ids = jax.lax.broadcasted_iota(jnp.int32, (1, nb), 1)
+    onehot = (flat == ids).astype(jnp.int32)  # (tile, nb)
+    excl = jnp.cumsum(onehot, axis=0) - onehot  # exclusive prefix per bucket
+    rank_in_tile = jnp.sum(excl * onehot, axis=1)  # (tile,)
+    base = jnp.sum(onehot * (start_ref[...] + run_ref[...]), axis=1)
+    dest_ref[...] = (base + rank_in_tile).reshape(rows, LANES)
+    run_ref[...] = run_ref[...] + jnp.sum(onehot, axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "rows", "interpret"))
+def partition_ranks(
+    bucket: jax.Array,
+    start: jax.Array,
+    *,
+    nb: int,
+    rows: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Stable counting destination per element, vectorized over buckets.
+
+    Args:
+      bucket: (n,) int32 bucket ids; ids outside [0, nb) are ignored (their
+        dest is unspecified and they never touch the running counters — the
+        wrapper layers use id ``nb`` as alignment padding).
+      start: (nb,) int32 exclusive prefix of bucket counts.
+      nb: number of buckets (static).
+
+    Returns (n,) int32 destinations: ``start[b_i]`` + the number of earlier
+    elements with the same bucket — the stable partition permutation's
+    scatter index (identical to the XLA per-tile-argsort placement).
+    """
+    n = bucket.shape[0]
+    tile = rows * LANES
+    n_pad = -(-n // tile) * tile
+    if n_pad != n:  # align to the kernel tile; pads use the out-of-range id
+        bucket = jnp.concatenate(
+            [bucket, jnp.full((n_pad - n,), nb, jnp.int32)]
+        )
+    bid2 = bucket.reshape(n_pad // LANES, LANES)
+    num_tiles = n_pad // tile
+
+    dest = pl.pallas_call(
+        functools.partial(_rank_kernel, nb=nb, rows=rows),
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, nb), lambda i: (0, 0)),  # start
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(bid2.shape, jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, nb), jnp.int32)],  # running counters
+        interpret=interpret,
+    )(start.reshape(1, nb), bid2)
+    return dest.reshape(n_pad)[:n]

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels.bitonic import bitonic_sort_windows
 from repro.kernels.classify import classify_histogram
-from repro.kernels.dispatch_rank import dispatch_ranks
+from repro.kernels.dispatch_rank import dispatch_ranks, partition_ranks
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.permute_inplace import permute_blocks_inplace
@@ -25,6 +25,7 @@ __all__ = [
     "bitonic_sort_windows",
     "permute_blocks_inplace",
     "dispatch_ranks",
+    "partition_ranks",
     "flash_attention",
     "flash_decode",
     "sort_blocks",
@@ -43,16 +44,16 @@ def sort_blocks(
 ) -> Tuple[jax.Array, jax.Array]:
     """Group homogeneous blocks by bucket with the in-place kernel.
 
-    Returns (permuted array, (k+1,) block-boundary offsets).
+    Thin single-array form of ``core.partition.partition_blocks`` (the
+    block-granular move of the "pallas" partition engine).  Returns
+    (permuted array, (k+1,) block-boundary offsets).
     """
-    hist = jnp.bincount(block_bucket, length=k)
-    d = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(hist).astype(jnp.int32)]
+    from repro.core.partition import partition_blocks
+
+    out, d = partition_blocks(
+        {"k": a}, block_bucket, k, block_elems, interpret=interpret
     )
-    out = permute_blocks_inplace(
-        a, block_bucket, d, k=k, block_elems=block_elems, interpret=interpret
-    )
-    return out, d
+    return out["k"], d
 
 
 def base_case_windows(

@@ -13,6 +13,7 @@ __all__ = [
     "bitonic_sort_windows_ref",
     "permute_blocks_ref",
     "dispatch_ranks_ref",
+    "partition_ranks_ref",
 ]
 
 
@@ -61,6 +62,18 @@ def dispatch_ranks_ref(expert_id: jax.Array, expert_start: jax.Array) -> jax.Arr
     # `dest` computed this way already equals start[e] + rank when starts are
     # the exclusive histogram prefix (grouped positions are exactly that).
     return dest
+
+
+def partition_ranks_ref(bucket: jax.Array, start: jax.Array, nb: int) -> jax.Array:
+    """Oracle: dest = start[b] + stable rank of the element within its bucket
+    (the stable counting placement — same contract as dispatch_ranks_ref but
+    with explicit, possibly non-prefix, starts)."""
+    onehot = (bucket[:, None] == jnp.arange(nb, dtype=jnp.int32)[None, :]).astype(
+        jnp.int32
+    )
+    rank = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=1)
+    base = jnp.sum(onehot * start[None, :], axis=1)
+    return (base + rank).astype(jnp.int32)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0):

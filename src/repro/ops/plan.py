@@ -16,7 +16,13 @@ that decision:
   * tuned plans are persisted to JSON (``REPRO_OPS_PLAN_CACHE`` or
     ``~/.cache/repro_ops_plans.json``) so the sweep is paid once per
     machine, and the measured wall clock is recorded alongside the chosen
-    config the way ``benchmarks/common.py`` records benchmark rows.
+    config the way ``benchmarks/common.py`` records benchmark rows;
+  * plans carry the *partition engine* ("xla" | "pallas") as a tuned
+    dimension: the sweep times both engines (the Pallas candidates are
+    skipped off-TPU above ``_PALLAS_TUNE_MAX`` elements, where interpret
+    mode would dominate the sweep) and ``engine_hint`` feeds the winner
+    back to ``SortConfig(engine="auto")`` callers.  Plans persisted before
+    the engine dimension existed load unchanged (the field defaults).
 """
 from __future__ import annotations
 
@@ -44,12 +50,37 @@ def _default_path() -> str:
     )
 
 
-def _candidates(n: int) -> list:
-    """Small sweep around the paper defaults; invalid plans are skipped."""
+# Off-TPU the Pallas kernels run in interpret mode; past this size their
+# sweep candidates cost more than any plan could save, so they are skipped
+# (the plan then records the XLA winner, which is also the honest answer).
+_PALLAS_TUNE_MAX = 1 << 16
+
+
+def _engines_for(n: int) -> tuple:
+    if jax.default_backend() == "tpu" or n <= _PALLAS_TUNE_MAX:
+        return ("xla", "pallas")
+    return ("xla",)
+
+
+def _candidates(n: int, engines: tuple = ("xla",)) -> list:
+    """Small sweep around the paper defaults; invalid plans are skipped.
+
+    The full W/tile/slack grid runs on the "xla" engine; the "pallas"
+    engine adds the default-geometry points only (its constant factors sit
+    in the kernels, not the window geometry), keeping the sweep short.
+    """
     out = []
     for base_case, tile in [(8192, 4096), (8192, 2048), (4096, 2048), (16384, 4096)]:
         for slack in (8, 4):
             cfg = SortConfig(base_case=base_case, tile=tile, slack=slack)
+            try:
+                plan_levels(max(n, 1), cfg)
+            except ValueError:
+                continue
+            out.append(cfg)
+    if "pallas" in engines:
+        for slack in (8, 4):
+            cfg = SortConfig(slack=slack, engine="pallas")
             try:
                 plan_levels(max(n, 1), cfg)
             except ValueError:
@@ -139,23 +170,38 @@ class PlanCache:
             x = jnp.asarray(rng.standard_normal(n).astype(np.float32)).astype(dtype)
         else:
             info = jnp.iinfo(dtype)
+            # draw in the target dtype: uint64's max overflows numpy's
+            # default int64 draw bounds
             x = jnp.asarray(
-                rng.integers(int(info.min), int(info.max), n, endpoint=False).astype(
-                    dtype.name
-                )
+                rng.integers(info.min, info.max, n, endpoint=False,
+                             dtype=np.dtype(dtype.name))
             )
         best_cfg, best_t = SortConfig(), float("inf")
-        for cfg in _candidates(n):
+        for cfg in _candidates(n, _engines_for(n)):
             t = _bench(_build(op, cfg, k), x)
             if t < best_t:
                 best_cfg, best_t = cfg, t
         self._plans[key] = {
             "config": asdict(best_cfg),
+            "engine": best_cfg.engine,
             "us": round(best_t * 1e6, 1),
             "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
         }
         self._save()
         return best_cfg
+
+    def engine_hint(self, n: int, dtype) -> Optional[str]:
+        """Persisted engine choice for a same-shape "sort" plan, or None.
+
+        This is what ``SortConfig(engine="auto")`` resolves through
+        (``core.ips4o.resolve_engine``): a tuned plan's engine wins; with
+        no plan the caller falls back to the backend heuristic.
+        """
+        plan = self._plans.get(self._key("sort", n, dtype, None))
+        if not plan:
+            return None
+        engine = plan.get("engine", plan.get("config", {}).get("engine"))
+        return engine if engine in ("xla", "pallas") else None
 
     # -- public entry -------------------------------------------------------
     def get_sorter(

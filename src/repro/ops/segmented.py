@@ -56,6 +56,7 @@ def segmented_sort(
     *,
     k: Optional[int] = None,
     cfg: SortConfig = SortConfig(),
+    engine: Optional[str] = None,
 ):
     """Sort each segment of ``keys`` independently, ascending, NaN-safe.
 
@@ -68,9 +69,13 @@ def segmented_sort(
         alongside, per segment.
       k: buckets per segment (power of two); default sizes buckets to the
         average segment like ``plan_levels`` does globally.
+      engine: partition-engine override ("xla" | "pallas" | "auto").
 
     Returns sorted keys, or (keys, values) when a payload is given.
     """
+    from repro.ops.sort import with_engine
+
+    cfg = with_engine(cfg, engine, keys)
     n = keys.shape[0]
     if keys.ndim != 1:
         raise ValueError("keys must be 1-D")

@@ -6,20 +6,47 @@ total order, so the documented NaN limitation disappears), and decode.
 """
 from __future__ import annotations
 
-from typing import Any
+from dataclasses import replace
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.ips4o import SortConfig, ips4o_sort
+from repro.core.ips4o import SortConfig, ips4o_sort, resolve_engine
 from repro.ops import keyspace
 
-__all__ = ["sort", "argsort"]
+__all__ = ["sort", "argsort", "with_engine"]
 
 
-def sort(keys: jax.Array, values: Any = None, *, cfg: SortConfig = SortConfig()):
+def with_engine(
+    cfg: SortConfig, engine: Optional[str], keys: Optional[jax.Array] = None
+) -> SortConfig:
+    """Override the partition engine on a config (None keeps cfg.engine).
+
+    When ``keys`` is given, "auto" is resolved HERE — against the caller's
+    original (n, dtype), which is what the plan cache keys tuned plans
+    under.  Deeper layers see the keyspace-encoded dtype and the padded n,
+    so resolving any later would never match a persisted plan.
+    """
+    cfg = cfg if engine is None else replace(cfg, engine=engine)
+    if cfg.engine == "auto" and keys is not None:
+        cfg = replace(
+            cfg, engine=resolve_engine(cfg, keys.shape[0], keys.dtype)
+        )
+    return cfg
+
+
+def sort(
+    keys: jax.Array,
+    values: Any = None,
+    *,
+    cfg: SortConfig = SortConfig(),
+    engine: Optional[str] = None,
+):
     """Sort ``keys`` ascending (NaNs last, -0.0 before +0.0), optionally
-    permuting a ``values`` pytree alongside.  Jit-compatible."""
+    permuting a ``values`` pytree alongside.  Jit-compatible.  ``engine``
+    ("xla" | "pallas" | "auto") overrides ``cfg.engine`` for this call."""
+    cfg = with_engine(cfg, engine, keys)
     enc = keyspace.encode(keys)
     if values is None:
         out = ips4o_sort(enc, cfg=cfg)
@@ -28,7 +55,12 @@ def sort(keys: jax.Array, values: Any = None, *, cfg: SortConfig = SortConfig())
     return keyspace.decode(out, keys.dtype), vs
 
 
-def argsort(keys: jax.Array, *, cfg: SortConfig = SortConfig()) -> jax.Array:
+def argsort(
+    keys: jax.Array,
+    *,
+    cfg: SortConfig = SortConfig(),
+    engine: Optional[str] = None,
+) -> jax.Array:
     """Indices that sort ``keys`` ascending: ``keys[argsort(keys)]`` is
     sorted.  The index payload rides the existing values-pytree threading;
     ties are in arbitrary (but deterministic) order."""
@@ -36,5 +68,5 @@ def argsort(keys: jax.Array, *, cfg: SortConfig = SortConfig()) -> jax.Array:
     idx = jnp.arange(n, dtype=jnp.int32)
     if n <= 1:
         return idx
-    _, order = ips4o_sort(keyspace.encode(keys), idx, cfg=cfg)
+    _, order = ips4o_sort(keyspace.encode(keys), idx, cfg=with_engine(cfg, engine, keys))
     return order

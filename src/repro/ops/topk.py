@@ -24,7 +24,7 @@ the complemented keys are the top-k of the originals.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,7 +80,11 @@ def _smallest(enc: jax.Array, kk: int, cfg: SortConfig) -> Tuple[jax.Array, jax.
 
 
 def bottomk(
-    keys: jax.Array, k: int, *, cfg: SortConfig = SortConfig()
+    keys: jax.Array,
+    k: int,
+    *,
+    cfg: SortConfig = SortConfig(),
+    engine: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """The ``k`` smallest keys in ascending order, with their indices.
 
@@ -93,15 +97,21 @@ def bottomk(
     n = keys.shape[0]
     if keys.ndim != 1:
         raise ValueError("keys must be 1-D")
+    from repro.ops.sort import with_engine
+
     kk = max(0, min(int(k), n))
     if kk == 0:
         return keys[:0], jnp.zeros((0,), jnp.int32)
-    out, idx = _smallest(keyspace.encode(keys), kk, cfg)
+    out, idx = _smallest(keyspace.encode(keys), kk, with_engine(cfg, engine, keys))
     return keyspace.decode(out, keys.dtype), idx
 
 
 def topk(
-    keys: jax.Array, k: int, *, cfg: SortConfig = SortConfig()
+    keys: jax.Array,
+    k: int,
+    *,
+    cfg: SortConfig = SortConfig(),
+    engine: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """The ``k`` largest keys in descending order, with their indices.
 
@@ -112,8 +122,10 @@ def topk(
     n = keys.shape[0]
     if keys.ndim != 1:
         raise ValueError("keys must be 1-D")
+    from repro.ops.sort import with_engine
+
     kk = max(0, min(int(k), n))
     if kk == 0:
         return keys[:0], jnp.zeros((0,), jnp.int32)
-    out, idx = _smallest(~keyspace.encode(keys), kk, cfg)
+    out, idx = _smallest(~keyspace.encode(keys), kk, with_engine(cfg, engine, keys))
     return keyspace.decode(~out, keys.dtype), idx

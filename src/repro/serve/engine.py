@@ -86,10 +86,14 @@ class Engine:
             cfg, mesh, jax.eval_shape(
                 lambda: init_decode_cache(cfg, scfg.batch_size, scfg.max_seq)
             ), strat))
-        self.cache = jax.jit(
+        self._init_cache = jax.jit(
             lambda: init_decode_cache(cfg, scfg.batch_size, scfg.max_seq),
             out_shardings=csh,
-        )()
+        )
+        # materialized lazily: generate() starts every call from a fresh
+        # cache (the steps donate the buffer), so an eager init here would
+        # only be thrown away
+        self.cache = None
 
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.scfg.temperature <= 0:
@@ -102,10 +106,17 @@ class Engine:
         """prompts: (B, P) int32.  Returns (B, max_new) generated tokens."""
         b, plen = prompts.shape
         assert b == self.scfg.batch_size
+        # Fresh KV per call: prefill/decode donate the cache buffer, so after
+        # a previous generate() it holds that call's keys/values past the new
+        # prompt length — a shorter prompt would attend over stale KV.
+        self.cache = self._init_cache()
         logits, self.cache = self.prefill_fn(self.params, prompts, self.cache)
         key = jax.random.PRNGKey(seed)
         toks = []
-        tok = self._sample(logits, key)
+        # split before the first sample too — sampling with the parent key
+        # and then splitting it correlates token 0 with the whole stream
+        key, sub = jax.random.split(key)
+        tok = self._sample(logits, sub)
         for i in range(max_new):
             toks.append(tok)
             pos = jnp.full((b, 1), plen + i, jnp.int32)

@@ -5,7 +5,18 @@ retire together and padding waste is minimized.
 Admission is a rank-k query, not a full sort: only ``batch_size`` requests
 leave the queue per call, so the scheduler uses ``repro.ops.bottomk`` —
 the splitter-based partial sort that base-case-sorts just the buckets
-covering the admitted prefix (DESIGN.md §5.2)."""
+covering the admitted prefix (DESIGN.md §5.2).
+
+Two serving-correctness details:
+
+  * selection runs on a composite (remaining, arrival-index) key, so ties
+    on ``remaining`` admit in FIFO order deterministically — the base-case
+    window sort is not stable across equal keys, and nondeterministic tie
+    order is a starvation risk;
+  * the queue is padded to the next power of two with sentinel keys and the
+    sorter comes from the plan cache, so a queue that grows by one request
+    per tick compiles O(log n) distinct shapes instead of one per length.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -14,7 +25,7 @@ from typing import List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ops import bottomk
+from repro.ops import plan
 
 __all__ = ["Request", "Scheduler"]
 
@@ -40,18 +51,38 @@ class Scheduler:
         self.queue.append(req)
 
     def next_batch(self) -> List[Request]:
-        """Admit up to batch_size requests, shortest-remaining-first.
+        """Admit up to batch_size requests, shortest-remaining-first,
+        FIFO among equal ``remaining``.
 
-        Rank-k selection on remaining length via ``ops.bottomk`` — requests
-        that retire together sit together, so slot churn (and therefore
-        prefill restarts) is minimized, and only the admitted prefix is
-        ever fully sorted.
+        Rank-k selection on a composite (remaining, arrival-index) key via
+        the plan-cached ``ops.bottomk`` — requests that retire together sit
+        together, so slot churn (and therefore prefill restarts) is
+        minimized, and only the admitted prefix is ever fully sorted.  The
+        queue position *is* the arrival index (the queue is append-only
+        between calls and removal preserves relative order).
         """
         if not self.queue:
             return []
-        keys = jnp.asarray([r.remaining for r in self.queue], jnp.int32)
-        _, order = bottomk(keys, min(self.batch_size, len(self.queue)))
-        order = np.asarray(order)
+        q = len(self.queue)
+        kk = min(self.batch_size, q)
+        rem = np.asarray([r.remaining for r in self.queue], np.int64)
+        n_pad = 1 << (q - 1).bit_length() if q > 1 else 1
+        comp = rem * n_pad + np.arange(q, dtype=np.int64)
+        sentinel = np.iinfo(np.int32).max
+        if comp.max() >= sentinel:
+            # composite would overflow int32 (gigantic remaining x queue):
+            # host-side stable selection keeps the same (remaining, arrival)
+            # order at O(n log n) — vanishingly rare in practice
+            order = np.lexsort((np.arange(q), rem))[:kk]
+        else:
+            keys = np.full(n_pad, sentinel, np.int32)
+            keys[:q] = comp.astype(np.int32)
+            f = plan.get_sorter(
+                n_pad, jnp.int32, "bottomk", k=min(self.batch_size, n_pad)
+            )
+            _, order = f(jnp.asarray(keys))
+            order = np.asarray(order)
+            order = order[order < q][:kk]  # drop sentinel pad slots
         batch = [self.queue[i] for i in order]
         picked = set(int(i) for i in order)
         self.queue = [r for i, r in enumerate(self.queue) if i not in picked]

@@ -143,3 +143,36 @@ def test_scheduler_shortest_remaining_first():
     batch = s.next_batch()
     assert [r.uid for r in batch] == [3, 1, 2]
     assert len(s.queue) == 2
+
+
+def test_scheduler_fifo_on_remaining_ties():
+    """Equal ``remaining`` must admit in submission (FIFO) order — the
+    composite (remaining, arrival-index) key makes tie-breaking
+    deterministic instead of riding the unstable window sort."""
+    s = Scheduler(batch_size=2)
+    for uid in range(6):
+        s.submit(Request(uid=uid, prompt_len=8, max_new=7))
+    assert [r.uid for r in s.next_batch()] == [0, 1]
+    assert [r.uid for r in s.next_batch()] == [2, 3]
+    assert [r.uid for r in s.next_batch()] == [4, 5]
+    # shorter-remaining still beats arrival order
+    s.submit(Request(uid=10, prompt_len=8, max_new=9))
+    s.submit(Request(uid=11, prompt_len=8, max_new=3))
+    s.submit(Request(uid=12, prompt_len=8, max_new=9))
+    assert [r.uid for r in s.next_batch()] == [11, 10]
+
+
+def test_scheduler_mixed_queue_lengths_deterministic():
+    """Same queue content -> same admission, across the pow2-padded shapes
+    (and re-running an identical queue state twice is identical)."""
+    def run(n):
+        s = Scheduler(batch_size=3)
+        for uid in range(n):
+            s.submit(Request(uid=uid, prompt_len=4, max_new=5 + (uid % 2)))
+        return [r.uid for r in s.next_batch()]
+
+    for n in (3, 4, 5, 7, 9):
+        first, second = run(n), run(n)
+        assert first == second
+        expect = sorted(range(n), key=lambda u: (5 + (u % 2), u))[: min(3, n)]
+        assert first == expect
