@@ -7,11 +7,12 @@
   io_volume          §4.5 / App. B    in-place vs out-of-place I/O volume
   moe_dispatch       framework role   sort-based vs one-hot MoE dispatch
   sort_ops           DESIGN.md §5     repro.ops: topk vs full sort, group_by
+  sort_batched       DESIGN.md §6     batched (B, n) sort vs loop-over-rows
 
-``python -m benchmarks.run [--quick] [--only NAME]`` prints one CSV block
-per table plus a Table-1-style summary, and writes every row to a
-machine-readable ``BENCH_sort.json`` (``--json PATH`` overrides) so each
-PR's perf trajectory is diffable.
+``python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`` prints one
+CSV block per table plus a Table-1-style summary, and writes every row to
+a machine-readable ``BENCH_sort.json`` (``--json PATH`` overrides) so
+each PR's perf trajectory is diffable.
 """
 from __future__ import annotations
 
@@ -27,13 +28,15 @@ MODULES = [
     "io_volume",
     "moe_dispatch",
     "sort_ops",
+    "sort_batched",
 ]
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark modules")
     ap.add_argument("--json", default="BENCH_sort.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
@@ -44,8 +47,15 @@ def main(argv=None) -> int:
 
     failures = 0
     all_rows = {}
+    only = None
+    if args.only:
+        only = {s.strip() for s in args.only.split(",") if s.strip()}
+        unknown = only - set(MODULES)
+        if unknown:  # fail loudly: a typo must not silently drop a bench
+            ap.error(f"--only: unknown module(s) {sorted(unknown)}; "
+                     f"choose from {MODULES}")
     for name in MODULES:
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.perf_counter()

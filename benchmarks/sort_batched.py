@@ -1,0 +1,88 @@
+"""Batched sort engine vs python-loop-over-rows (DESIGN.md §6).
+
+The claim to evidence: real callers carry a batch dimension, and
+``ops.batched_sort``'s single-trace pipeline beats B dispatches of the
+1-D sort.  Two regimes, matching the rewired callers:
+
+  * **scheduler regime** — many small int32 rows (pow2-padded admission
+    queues, ``serve.scheduler.admit_many``): per-row work is comparable
+    to the per-call dispatch cost, so looping wastes most of the step and
+    batching wins big.  This is where the >= 3x acceptance bar (ISSUE 3)
+    is measured, at B >= 32.
+  * **bulk regime** — fewer large f32 rows (per-layer routing ids,
+    per-shard length argsorts): the sort work itself dominates and the
+    batched win settles toward the dispatch-amortization floor; reported
+    for honesty, not for the bar.
+
+Timings use min-of-N (``common.bench(agg="min")``): the loop side
+accumulates B sequential dispatches per observation, so medians carry
+scheduler noise that the minimum does not.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ips4o import SortConfig
+from repro.ops import batched_sort, sort
+
+from benchmarks.common import Row, bench
+
+# cfg matched to the row length, as the plan cache would pick: small
+# windows for queue-sized rows, paper defaults for bulk rows
+_SMALL = SortConfig(base_case=256, tile=256, max_sample=256, kmax=64)
+_BULK = SortConfig()
+
+
+def _sweep(quick: bool):
+    small = [(32, 256), (64, 256), (64, 512), (128, 256)]
+    bulk = [(32, 4096)] if quick else [(32, 4096), (32, 16384)]
+    if not quick:
+        small += [(128, 512), (256, 256)]
+    return [(B, n, "scheduler", _SMALL, jnp.int32) for B, n in small] + [
+        (B, n, "bulk", _BULK, jnp.float32) for B, n in bulk
+    ]
+
+
+def run(quick: bool = False):
+    rows: list[Row] = []
+    rng = np.random.default_rng(0)
+    for B, n, regime, cfg, dtype in _sweep(quick):
+        if dtype == jnp.int32:
+            x = jnp.asarray(rng.integers(0, 1 << 30, (B, n)).astype(np.int32))
+        else:
+            x = jnp.asarray(rng.standard_normal((B, n)).astype(np.float32))
+        f_batched = jax.jit(lambda a, cfg=cfg: batched_sort(a, cfg=cfg))
+        f_row = jax.jit(lambda a, cfg=cfg: sort(a, cfg=cfg))
+
+        out = np.asarray(f_batched(x))
+        np.testing.assert_array_equal(out, np.sort(np.asarray(x), axis=1))
+        np.testing.assert_array_equal(  # per-row bit-parity with the 1-D op
+            out[0], np.asarray(f_row(x[0]))
+        )
+
+        t_batched = bench(lambda: f_batched(x), iters=9, agg="min")
+        t_loop = bench(
+            lambda: [f_row(x[i]) for i in range(B)], iters=9, agg="min"
+        )
+        rows.append({
+            "bench": "batched_vs_loop",
+            "regime": regime,
+            "B": B,
+            "n": n,
+            "batched_us": round(t_batched * 1e6, 1),
+            "loop_us": round(t_loop * 1e6, 1),
+            "speedup": round(t_loop / t_batched, 2),
+            "batched_meps": round(B * n / t_batched / 1e6, 1),
+        })
+    best = max(r["speedup"] for r in rows if r["B"] >= 32)
+    print(f"-- best speedup at B>=32: {best:.2f}x (bar: >= 3x)")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run(quick=True), ["bench", "regime", "B", "n", "batched_us",
+                           "loop_us", "speedup", "batched_meps"])

@@ -6,6 +6,9 @@ partition machinery routing tokens to experts:
   * expert-major token grouping through ``repro.ops.group_by`` — the
     subsystem view of dispatch — with the stable-partition and fused
     Pallas (``kernels.dispatch_rank``) engines agreeing,
+  * per-LAYER routing in ONE call: a whole step's routing ids (L, n*k)
+    dispatched by one batched ``sort_dispatch`` / one ``batched_argsort``
+    instead of L python-loop dispatches (DESIGN.md §6),
   * per-expert token counts from the tile-histogram pass,
   * capacity clamping (the overflow-block analogue) and drop fraction,
   * gradient flow through the dispatch (train a few steps, loss drops),
@@ -21,7 +24,7 @@ from repro.configs.registry import get_reduced
 from repro.data.pipeline import SyntheticLM
 from repro.models.moe import expert_capacity, sort_dispatch
 from repro.models.transformer import init_model, train_loss
-from repro.ops import group_by
+from repro.ops import batched_argsort, group_by
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 
 # --- 1. dispatch mechanics on raw routing ids ------------------------------
@@ -46,6 +49,26 @@ np.testing.assert_array_equal(np.asarray(g.perm), np.asarray(gp.perm))
 assert np.all(np.diff(np.asarray(g.keys)) >= 0)  # expert-major grouping
 print(f"ops.group_by == pallas dispatch-rank grouping  "
       f"(max per-expert load {int(np.asarray(g.counts).max())})")
+
+# --- 1c. per-layer routing in ONE call -------------------------------------
+# A transformer step routes every MoE layer; batching the dispatch over the
+# layer axis runs all L stable partitions in one trace (DESIGN.md §6).
+L = 6
+flat_e_layers = jnp.asarray(rng.integers(0, E, (L, n * k)).astype(np.int32))
+slot_b, kept_b, counts_b = jax.jit(
+    lambda a: sort_dispatch(a, E, cap)
+)(flat_e_layers)
+for layer in range(L):
+    s1, k1, c1 = sort_dispatch(flat_e_layers[layer], E, cap)
+    np.testing.assert_array_equal(np.asarray(slot_b[layer]), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(kept_b[layer]), np.asarray(k1))
+    np.testing.assert_array_equal(np.asarray(counts_b[layer]), np.asarray(c1))
+# the expert-major order itself, for all layers in one batched argsort
+order_b = batched_argsort(flat_e_layers)
+grouped = np.take_along_axis(np.asarray(flat_e_layers), np.asarray(order_b), axis=1)
+assert np.all(np.diff(grouped, axis=1) >= 0)
+print(f"1c. {L} layers routed in one batched call "
+      f"(per-layer == unbatched, bit-exact)")
 
 # --- 2. the same machinery inside the full model ---------------------------
 cfg = get_reduced("deepseek-moe-16b")

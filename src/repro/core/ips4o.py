@@ -47,8 +47,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sampling
-from repro.core.classifier import classify, classify_segmented
-from repro.core.partition import ENGINES, stable_partition
+from repro.core.classifier import classify, classify_batched, classify_segmented
+from repro.core.partition import ENGINES, batched_stable_partition, stable_partition
 
 __all__ = [
     "SortConfig",
@@ -66,6 +66,16 @@ __all__ = [
     "bucket_violations",
     "segment_ids",
     "stable_full_sort",
+    # batch-axis-native pipeline, consumed by ``repro.ops.batched`` (§6)
+    "ips4o_sort_batched",
+    "batched_pad_with_sentinel",
+    "batched_level_pass",
+    "batched_segmented_level_pass",
+    "batched_partition_passes",
+    "batched_base_case",
+    "batched_bucket_violations",
+    "batched_segment_ids",
+    "batched_stable_full_sort",
 ]
 
 
@@ -115,10 +125,11 @@ def _auto_tile(n: int, nb: int, cfg: SortConfig) -> int:
 _PALLAS_NB_MAX = 1024
 
 
-def resolve_engine(cfg: SortConfig, n: int, dtype=None) -> str:
+def resolve_engine(cfg: SortConfig, n: int, dtype=None, batch: Optional[int] = None) -> str:
     """Concrete engine for this (cfg, n): "auto" consults the plan cache's
-    persisted choice for a same-shape sort, else picks by backend (the
-    kernels lower natively only on TPU)."""
+    persisted choice for a same-shape sort — the (batch, n) shape when
+    ``batch`` is given — else picks by backend (the kernels lower natively
+    only on TPU)."""
     if cfg.engine in ENGINES:
         return cfg.engine
     if cfg.engine != "auto":
@@ -128,7 +139,7 @@ def resolve_engine(cfg: SortConfig, n: int, dtype=None) -> str:
     if dtype is not None:
         from repro.ops.plan import default_cache  # lazy: ops layers on core
 
-        hint = default_cache.engine_hint(n, dtype)
+        hint = default_cache.engine_hint(n, dtype, batch=batch)
         if hint is not None:
             return hint
     return "pallas" if jax.default_backend() == "tpu" else "xla"
@@ -390,6 +401,289 @@ def _sort_padded(arrays: Any, n_real: int, cfg: SortConfig, levels: Sequence[int
             arrays,
         )
     return base_case(arrays, fb, W)
+
+
+# --------------------------------------------------------------------------
+# Batch-axis-native pipeline (DESIGN.md §6): every stage of the 1-D sort
+# lifted over a leading batch dimension (B, n) in ONE trace.  Rows never
+# exchange elements; each row gets its own splitter set, its own bucket
+# offsets, and its own stable partition.  The Pallas engine runs the
+# batch-grid kernels (grid = (B, tiles)); the XLA engine vmaps its dense
+# formulation, which batches natively.
+
+
+def batched_segment_ids(offsets: jax.Array, n: int) -> jax.Array:
+    """Per-position bucket id per row from (B, nb+1) boundary offsets."""
+    return jax.vmap(lambda off: segment_ids(off, n))(offsets)
+
+
+def batched_stable_full_sort(arrays: Any) -> Any:
+    """Per-row stable sort by key — the batched robustness fallback."""
+    order = jnp.argsort(arrays["k"], axis=1, stable=True)
+    take = jax.vmap(lambda a, p: jnp.take(a, p, axis=0))
+    return jax.tree.map(lambda a: take(a, order), arrays)
+
+
+def batched_pad_with_sentinel(arrays: Any, unit: int) -> Any:
+    """Pad axis 1 of every (B, n, ...) leaf to a multiple of ``unit``; pad
+    keys get the dtype sentinel (each row's overflow-block analogue)."""
+    n = arrays["k"].shape[1]
+    n_pad = -(-n // unit) * unit
+    if n_pad == n:
+        return arrays
+    pad_n = n_pad - n
+    sent = sampling.sentinel_for(arrays["k"].dtype)
+
+    def pad(a):
+        padding = [(0, 0), (0, pad_n)] + [(0, 0)] * (a.ndim - 2)
+        return jnp.pad(a, padding)
+
+    arrays = jax.tree.map(pad, arrays)
+    arrays["k"] = arrays["k"].at[:, n:].set(sent)
+    return arrays
+
+
+def batched_base_case(
+    arrays: Any, fb: jax.Array, W: int, limit: Optional[int] = None
+) -> Any:
+    """The two overlapped window-sort passes (§4.3) over (B, n, ...) leaves.
+
+    Rows share no window: the per-row index range [lo, hi) reshapes to
+    B * (hi-lo)/W independent windows, so the same ``_window_perm``
+    machinery sorts every row's windows in one pass.  ``limit`` (static,
+    multiple of W) restricts both passes to [0, limit) *per row*.
+    """
+    B = fb.shape[0]
+    n = fb.shape[1] if limit is None else limit
+
+    def one_pass(arrays, fb, lo, hi):
+        m = hi - lo
+        nw = B * (m // W)
+        kw = arrays["k"][:, lo:hi].reshape(nw, W)
+        fw = fb[:, lo:hi].reshape(nw, W)
+        perm = _window_perm(kw, fw)
+
+        def fix(a):
+            aw = a[:, lo:hi].reshape((nw, W) + a.shape[2:])
+            sw = _apply_window_perm(perm, aw).reshape((B, m) + a.shape[2:])
+            return a.at[:, lo:hi].set(sw)
+
+        arrays = jax.tree.map(fix, arrays)
+        fb = fb.at[:, lo:hi].set(_apply_window_perm(perm, fw).reshape(B, m))
+        return arrays, fb
+
+    arrays, fb = one_pass(arrays, fb, 0, n)
+    if n > W:  # offset pass: per-row windows at W/2
+        arrays, fb = one_pass(arrays, fb, W // 2, n - W // 2)
+    return arrays
+
+
+def batched_bucket_violations(
+    offsets: jax.Array,
+    nb: int,
+    W: int,
+    pad_bucket: Optional[int] = None,
+    limit: Optional[jax.Array] = None,
+) -> jax.Array:
+    """True iff ANY row has a non-trivial bucket exceeding W/2.  The
+    fallback is batch-wide (one ``lax.cond`` for the whole trace), so a
+    single violating row reroutes every row through the stable sort."""
+    sizes = jnp.diff(offsets, axis=1)  # (B, nb)
+    ids = jnp.arange(nb, dtype=jnp.int32)
+    nontrivial = (ids % 2) == 0
+    if pad_bucket is not None:
+        nontrivial = nontrivial & (ids != pad_bucket)
+    nontrivial = jnp.broadcast_to(nontrivial[None, :], sizes.shape)
+    if limit is not None:
+        nontrivial = nontrivial & (offsets[:, :-1] < limit)
+    return jnp.any(jnp.where(nontrivial, sizes, 0) > W // 2)
+
+
+def batched_level_pass(
+    arrays: Any, n_real: int, k: int, cfg: SortConfig, rng: jax.Array
+) -> Tuple[Any, jax.Array, int, int]:
+    """One global level pass per row: per-row sample -> per-row splitters ->
+    batched branchless classify -> per-row stable partition.
+
+    Returns (arrays, offsets (B, nb+1), nb, pad_bucket) with nb = 2k + 1.
+    On the "pallas" engine the classify+histogram and the rank placement
+    run as the batch-grid kernels (one launch each for all B rows).
+    """
+    keys = arrays["k"]
+    B, n = keys.shape
+    m1 = min(max(sampling.oversampling_factor(n_real) * k, k), cfg.max_sample, n_real)
+    row_rngs = jax.random.split(rng, B)
+    sample_pos = jax.vmap(lambda r: jax.random.randint(r, (m1,), 0, n_real))(row_rngs)
+    sample = jnp.sort(jnp.take_along_axis(keys, sample_pos, axis=1), axis=1)
+    spl = sampling.select_splitters(sample, k)  # (B, k-1) per-row splitters
+
+    nb = 2 * k + 1  # +1: dedicated pad bucket per row
+    pad_n = n - n_real
+    engine = resolve_engine(cfg, n, keys.dtype)
+    rows = _classify_rows(n) if engine == "pallas" else 0
+    interpret = jax.default_backend() != "tpu"
+
+    off = None
+    if rows:
+        from repro.kernels.classify import classify_histogram_batched
+
+        b, hist = classify_histogram_batched(
+            keys, spl, k=k, rows=rows, interpret=interpret
+        )
+        totals = hist.sum(axis=1)  # (B, 2k)
+        if pad_n:
+            # each row's pads are all sentinel keys in one bucket — read it
+            # off the row's first pad position and move the count over
+            totals = totals.at[jnp.arange(B), b[:, n_real]].add(-pad_n)
+        totals = jnp.concatenate(
+            [totals, jnp.full((B, 1), pad_n, jnp.int32)], axis=1
+        ).astype(jnp.int32)
+        off = jnp.concatenate(
+            [jnp.zeros((B, 1), jnp.int32), jnp.cumsum(totals, axis=1)], axis=1
+        )
+    else:
+        b = classify_batched(keys, spl, k)
+    if pad_n:
+        is_pad = jnp.arange(n, dtype=jnp.int32)[None, :] >= n_real
+        b = jnp.where(is_pad, 2 * k, b)
+    arrays, off = batched_stable_partition(
+        b, arrays, nb, _auto_tile(n, nb, cfg), engine=engine,
+        offsets=off, interpret=interpret,
+    )
+    return arrays, off, nb, 2 * k
+
+
+def batched_segmented_level_pass(
+    arrays: Any,
+    seg_offsets: jax.Array,
+    num_seg: int,
+    n_real: int,
+    k: int,
+    cfg: SortConfig,
+    rng: jax.Array,
+    sample_cap: int = 2048,
+) -> Tuple[Any, jax.Array, int]:
+    """Recursion level 2 per row: per-(row, segment) splitters, flattened
+    classification, per-row composite-bucket partition.
+
+    ``seg_offsets`` (B, num_seg+1) bounds each row's segments.  The
+    composite id ``seg * 2k + local`` stays row-local, so the partition is
+    the per-row one (nb = num_seg * 2k buckets per row) — rows still never
+    exchange elements.
+    """
+    keys = arrays["k"]
+    B, n = keys.shape
+    seg = batched_segment_ids(seg_offsets, n)  # (B, n)
+    m = min(max(sampling.oversampling_factor(n_real) * k, k), sample_cap)
+    seg_rngs = jax.random.split(rng, B * num_seg).reshape(B, num_seg, -1)
+    pos = jax.vmap(
+        jax.vmap(lambda r, lo, hi: sampling.sample_indices(r, m, lo, hi))
+    )(seg_rngs, seg_offsets[:, :-1], seg_offsets[:, 1:])  # (B, num_seg, m)
+    svals = jnp.sort(
+        jnp.take_along_axis(keys, pos.reshape(B, num_seg * m), axis=1).reshape(
+            B, num_seg, m
+        ),
+        axis=-1,
+    )
+    spl = sampling.select_splitters(svals, k)  # (B, num_seg, k-1)
+    # flatten (row, segment) -> global segment for the shared classifier
+    gseg = (seg + num_seg * jnp.arange(B, dtype=jnp.int32)[:, None]).reshape(B * n)
+    local = classify_segmented(
+        keys.reshape(B * n), gseg, spl.reshape(B * num_seg, k - 1), k
+    ).reshape(B, n)
+    comp = seg * (2 * k) + local  # row-local composite bucket
+    nb = num_seg * 2 * k
+    engine = resolve_engine(cfg, n, keys.dtype)
+    if engine == "pallas" and nb > _PALLAS_NB_MAX:
+        engine = "xla"
+    arrays, offsets = batched_stable_partition(
+        comp, arrays, nb, _auto_tile(n, nb, cfg), engine=engine
+    )
+    return arrays, offsets, nb
+
+
+def batched_partition_passes(
+    arrays: Any, n_real: int, cfg: SortConfig, levels: Sequence[int]
+) -> Tuple[Any, jax.Array, int, Optional[int]]:
+    """The (at most two) batched level passes of the flattened recursion.
+
+    Returns (arrays, offsets (B, nb+1), nb, pad_bucket); per row, buckets
+    are contiguous and in key order, odd local ids are equality buckets,
+    pads sit at the row tail.
+    """
+    rng = jax.random.PRNGKey(cfg.seed)
+    r1, r2 = jax.random.split(rng)
+    arrays, off1, nb1, pad_bucket = batched_level_pass(
+        arrays, n_real, levels[0], cfg, r1
+    )
+    if len(levels) == 1:
+        return arrays, off1, nb1, pad_bucket
+    arrays, offsets, nb = batched_segmented_level_pass(
+        arrays, off1, nb1, n_real, levels[1], cfg, r2
+    )
+    return arrays, offsets, nb, None  # pads now sit in odd equality buckets
+
+
+def _sort_padded_batched(
+    arrays: Any, n_real: int, cfg: SortConfig, levels: Sequence[int]
+) -> Any:
+    """Sort padded (B, n_pad, ...) arrays dict, all rows in one trace."""
+    n = arrays["k"].shape[1]
+    W = cfg.base_case
+
+    if not levels:
+        return batched_stable_full_sort(arrays)
+
+    arrays, offsets, nb, pad_bucket = batched_partition_passes(
+        arrays, n_real, cfg, levels
+    )
+
+    fb = batched_segment_ids(offsets, n)
+    violated = batched_bucket_violations(offsets, nb, W, pad_bucket)
+
+    if cfg.fallback:
+        return jax.lax.cond(
+            violated,
+            batched_stable_full_sort,
+            lambda a: batched_base_case(a, fb, W),
+            arrays,
+        )
+    return batched_base_case(arrays, fb, W)
+
+
+def ips4o_sort_batched(
+    keys: jax.Array,
+    values: Any = None,
+    cfg: SortConfig = SortConfig(),
+):
+    """Sort every row of ``keys`` (B, n) independently, ascending, in ONE
+    trace (DESIGN.md §6) — no vmap over the 1-D sort, no python loop.
+
+    Optionally permutes a ``values`` pytree (leaves with leading dims
+    (B, n)) alongside, row by row.  Same key contract as
+    :func:`ips4o_sort`: keys must form a total order under ``>`` / ``==``
+    (the ``repro.ops.batched`` entry points keyspace-encode first and are
+    NaN-safe).  Jit-compatible; static shapes.
+    """
+    if keys.ndim != 2:
+        raise ValueError("keys must be 2-D (B, n)")
+    B, n = keys.shape
+    if n <= 1 or B == 0:
+        return keys if values is None else (keys, values)
+
+    arrays = {"k": keys}
+    if values is not None:
+        arrays["v"] = values
+
+    unit = max(cfg.base_case, cfg.tile)
+    arrays = batched_pad_with_sentinel(arrays, unit)
+    levels = plan_levels(arrays["k"].shape[1], cfg)
+    arrays = _sort_padded_batched(arrays, n, cfg, levels)
+
+    out_k = arrays["k"][:, :n]
+    if values is None:
+        return out_k
+    return out_k, jax.tree.map(lambda a: a[:, :n], arrays["v"])
 
 
 def ips4o_sort(

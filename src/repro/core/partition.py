@@ -47,6 +47,7 @@ import jax.numpy as jnp
 __all__ = [
     "tile_histogram",
     "stable_partition",
+    "batched_stable_partition",
     "partition_permutation",
     "partition_ranks_pallas",
     "partition_blocks",
@@ -177,6 +178,69 @@ def stable_partition(
         raise ValueError(f"unknown partition engine {engine!r}; expected {ENGINES}")
     perm, offsets = partition_permutation(bucket, nb, tile)
     out = jax.tree.map(lambda a: jnp.take(a, perm, axis=0), arrays)
+    return out, offsets
+
+
+def batched_stable_partition(
+    bucket: jax.Array,
+    arrays: Pytree,
+    nb: int,
+    tile: int,
+    engine: str = "xla",
+    *,
+    offsets: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[Pytree, jax.Array]:
+    """Per-row stable partition over a leading batch dimension (DESIGN.md §6).
+
+    ``bucket`` is (B, n); every leaf of ``arrays`` is (B, n, ...).  Each row
+    is partitioned independently — elements never cross rows — producing
+    per-row bucket boundaries ``offsets`` (B, nb+1).
+
+    Engines mirror :func:`stable_partition`:
+
+      "xla"     the per-tile-argsort permutation, vmapped over rows (dense
+                jnp ops batch natively);
+      "pallas"  ONE launch of the batch-grid counting-rank kernel
+                (``kernels.dispatch_rank.partition_ranks_batched``) — the
+                running counters reset at each row's first tile — followed
+                by a flat scatter.
+
+    Both produce the bit-identical per-row stable permutation.
+    """
+    B, n = bucket.shape
+    if engine == "pallas":
+        if offsets is None:
+            totals = jax.vmap(lambda row: jnp.bincount(row, length=nb))(bucket)
+            offsets = jnp.concatenate(
+                [
+                    jnp.zeros((B, 1), jnp.int32),
+                    jnp.cumsum(totals, axis=1).astype(jnp.int32),
+                ],
+                axis=1,
+            )
+        from repro.kernels.dispatch_rank import partition_ranks_batched
+
+        if interpret is None:
+            interpret = _default_interpret()
+        dest = partition_ranks_batched(
+            bucket.astype(jnp.int32), offsets[:, :-1], nb=nb, interpret=interpret
+        )
+        # flatten the per-row destinations into one scatter over (B*n, ...)
+        flat_dest = (dest + n * jnp.arange(B, dtype=jnp.int32)[:, None]).reshape(-1)
+
+        def move(a):
+            fa = a.reshape((B * n,) + a.shape[2:])
+            out = jnp.zeros_like(fa).at[flat_dest].set(fa, mode="promise_in_bounds")
+            return out.reshape(a.shape)
+
+        return jax.tree.map(move, arrays), offsets
+    if engine != "xla":
+        raise ValueError(f"unknown partition engine {engine!r}; expected {ENGINES}")
+    perm, offsets = jax.vmap(lambda b: partition_permutation(b, nb, tile))(bucket)
+    out = jax.tree.map(
+        lambda a: jax.vmap(lambda row, p: jnp.take(row, p, axis=0))(a, perm), arrays
+    )
     return out, offsets
 
 

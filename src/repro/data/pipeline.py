@@ -49,20 +49,9 @@ class SyntheticLM:
             step += 1
 
 
-def pack_by_length(lengths: np.ndarray, seq_len: int):
-    """Greedy packing of documents into rows after an IPS4o length sort.
-
-    Returns (row_id, offset) per document.  Sorting by length first (the
-    paper's engine, used as a library) makes greedy packing near-optimal and
-    deterministic.
-    """
-    import jax.numpy as jnp
-
-    from repro.ops import get_sorter
-
-    n = len(lengths)
-    lengths_np = np.asarray(lengths, np.int32)
-    idx = np.asarray(get_sorter(n, jnp.int32, op="argsort")(jnp.asarray(lengths_np)))
+def _greedy_pack(lengths_np: np.ndarray, idx: np.ndarray, seq_len: int):
+    """Greedy first-fit over length-sorted docs; see :func:`pack_by_length`."""
+    n = len(lengths_np)
     keys = lengths_np[idx]
     row_id = np.zeros(n, np.int32)
     offset = np.zeros(n, np.int32)
@@ -84,3 +73,32 @@ def pack_by_length(lengths: np.ndarray, seq_len: int):
             row_id[doc] = len(rows) - 1
             offset[doc] = 0
     return row_id, offset, len(rows)
+
+
+def pack_by_length(lengths: np.ndarray, seq_len: int):
+    """Greedy packing of documents into rows after an IPS4o length sort.
+
+    Returns (row_id, offset, num_rows) per document.  Sorting by length
+    first (the paper's engine, used as a library) makes greedy packing
+    near-optimal and deterministic.
+
+    2-D ``lengths`` (S, n) packs S shards (hosts, corpus slices) at once:
+    ONE plan-cached batched argsort (``ops.batched_argsort`` via
+    ``get_sorter(..., batch=S)``, DESIGN.md §6) sorts every shard's
+    lengths in a single trace, then each shard packs greedily from its own
+    row.  Returns a list of S (row_id, offset, num_rows) tuples.
+    """
+    import jax.numpy as jnp
+
+    from repro.ops import get_sorter
+
+    lengths_np = np.asarray(lengths, np.int32)
+    if lengths_np.ndim == 2:
+        s, n = lengths_np.shape
+        idx = np.asarray(
+            get_sorter(n, jnp.int32, op="argsort", batch=s)(jnp.asarray(lengths_np))
+        )
+        return [_greedy_pack(lengths_np[i], idx[i], seq_len) for i in range(s)]
+    n = len(lengths_np)
+    idx = np.asarray(get_sorter(n, jnp.int32, op="argsort")(jnp.asarray(lengths_np)))
+    return _greedy_pack(lengths_np, idx, seq_len)

@@ -27,6 +27,13 @@ one-hot reduction.
 VMEM budget per grid step: tile keys (rows*128*4 B) + splitters (k*4 B) +
 one-hot reduction tile — e.g. rows=32, k=128: 16 KiB keys + compare
 broadcast, well within ~16 MiB VMEM.
+
+The batched variant (``classify_histogram_batched``, DESIGN.md §6) adds a
+*batch grid dimension*: grid = (B, num_tiles), each program classifying
+tile ``i`` of row ``b`` against row ``b``'s own splitter set.  The kernel
+body is unchanged — only the BlockSpec index maps route per-row blocks —
+so B independent rows classify in one ``pallas_call`` instead of B
+dispatches of the unbatched kernel.
 """
 from __future__ import annotations
 
@@ -39,7 +46,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.sampling import sentinel_for
 
-__all__ = ["classify_histogram"]
+__all__ = ["classify_histogram", "classify_histogram_batched"]
 
 LANES = 128
 
@@ -108,3 +115,54 @@ def classify_histogram(
         interpret=interpret,
     )(keys2, spl2)
     return bucket.reshape(n), hist
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rows", "interpret"))
+def classify_histogram_batched(
+    keys: jax.Array,
+    splitters: jax.Array,
+    *,
+    k: int,
+    rows: int = 32,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Classify ``keys`` (B, n) against per-row ``splitters`` (B, k-1).
+
+    The batch-grid form of :func:`classify_histogram`: grid (B, num_tiles),
+    row ``b``'s tiles compare against row ``b``'s splitter block.  Returns
+    (bucket ids (B, n) int32 in [0, 2k), per-tile histograms
+    (B, num_tiles, 2k) int32).  n must be a multiple of rows*128.
+    """
+    B, n = keys.shape
+    tile = rows * LANES
+    if n % tile:
+        raise ValueError(f"n={n} must be a multiple of tile={tile}")
+    num_tiles = n // tile
+    nb = 2 * k
+    keys2 = keys.reshape(B * num_tiles * rows, LANES)
+    upper = jnp.concatenate(
+        [
+            splitters,
+            jnp.full((B, 1), sentinel_for(splitters.dtype), splitters.dtype),
+        ],
+        axis=1,
+    )  # (B, k): per-row splitters + the dtype sentinel upper
+
+    bucket, hist = pl.pallas_call(
+        functools.partial(_kernel, k=k, nb=nb),
+        grid=(B, num_tiles),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda b, i: (b * num_tiles + i, 0)),
+            pl.BlockSpec((1, k), lambda b, i: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, LANES), lambda b, i: (b * num_tiles + i, 0)),
+            pl.BlockSpec((1, nb), lambda b, i: (b * num_tiles + i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * num_tiles * rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((B * num_tiles, nb), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys2, upper)
+    return bucket.reshape(B, n), hist.reshape(B, num_tiles, nb)

@@ -20,6 +20,13 @@ Two variants:
     2k+1) — counters are a VMEM (1, nb) vector and the base lookup is a
     one-hot contraction, so nothing unrolls over nb.  This is the "pallas"
     partition engine of ``core.partition.stable_partition``.
+
+``partition_ranks_batched`` (DESIGN.md §6) lifts the second variant over a
+leading batch dimension with a *batch grid dimension*: grid =
+(B, num_tiles).  The TPU grid iterates sequentially, minor dimension last,
+so the running counters simply reset at tile 0 of every row (instead of
+only at program 0) and each row's placement stays independent — B stable
+per-row partitions in one kernel launch.
 """
 from __future__ import annotations
 
@@ -30,7 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["dispatch_ranks", "partition_ranks"]
+__all__ = ["dispatch_ranks", "partition_ranks", "partition_ranks_batched"]
 
 LANES = 128
 
@@ -164,3 +171,68 @@ def partition_ranks(
         interpret=interpret,
     )(start.reshape(1, nb), bid2)
     return dest.reshape(n_pad)[:n]
+
+
+def _rank_kernel_batched(start_ref, bid_ref, dest_ref, run_ref, *, nb: int, rows: int):
+    tile_id = pl.program_id(1)  # minor grid dim: tiles within the row
+
+    @pl.when(tile_id == 0)
+    def _init():  # new row: counters restart (rows are independent)
+        run_ref[...] = jnp.zeros((1, nb), jnp.int32)
+
+    bid = bid_ref[...]  # (rows, 128)
+    flat = bid.reshape(rows * LANES, 1)
+    ids = jax.lax.broadcasted_iota(jnp.int32, (1, nb), 1)
+    onehot = (flat == ids).astype(jnp.int32)  # (tile, nb)
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    rank_in_tile = jnp.sum(excl * onehot, axis=1)
+    base = jnp.sum(onehot * (start_ref[...] + run_ref[...]), axis=1)
+    dest_ref[...] = (base + rank_in_tile).reshape(rows, LANES)
+    run_ref[...] = run_ref[...] + jnp.sum(onehot, axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "rows", "interpret"))
+def partition_ranks_batched(
+    bucket: jax.Array,
+    start: jax.Array,
+    *,
+    nb: int,
+    rows: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-row stable counting destinations, batch grid dimension (B, tiles).
+
+    Args:
+      bucket: (B, n) int32 bucket ids per row; ids outside [0, nb) are
+        ignored (their dest is unspecified; used for alignment padding).
+      start: (B, nb) int32 per-row exclusive prefix of bucket counts.
+      nb: number of buckets per row (static).
+
+    Returns (B, n) int32 destinations *within each row*: row b's element i
+    goes to ``start[b, bucket[b, i]]`` + the number of earlier row-b
+    elements in the same bucket — B independent stable partitions computed
+    by one kernel, counters resetting at each row's first tile.
+    """
+    B, n = bucket.shape
+    tile = rows * LANES
+    n_pad = -(-n // tile) * tile
+    if n_pad != n:  # align rows to the kernel tile; pads use the trash id
+        bucket = jnp.concatenate(
+            [bucket, jnp.full((B, n_pad - n), nb, jnp.int32)], axis=1
+        )
+    bid2 = bucket.reshape(B * n_pad // LANES, LANES)
+    num_tiles = n_pad // tile
+
+    dest = pl.pallas_call(
+        functools.partial(_rank_kernel_batched, nb=nb, rows=rows),
+        grid=(B, num_tiles),
+        in_specs=[
+            pl.BlockSpec((1, nb), lambda b, i: (b, 0)),  # per-row starts
+            pl.BlockSpec((rows, LANES), lambda b, i: (b * num_tiles + i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANES), lambda b, i: (b * num_tiles + i, 0)),
+        out_shape=jax.ShapeDtypeStruct(bid2.shape, jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, nb), jnp.int32)],  # running counters
+        interpret=interpret,
+    )(start.reshape(B, nb), bid2)
+    return dest.reshape(B, n_pad)[:, :n]

@@ -81,7 +81,7 @@ def init_moe(
 
 
 def sort_dispatch(
-    expert_id: jax.Array,   # (n*k,) int32 flat expert assignment
+    expert_id: jax.Array,   # (n*k,) or (L, n*k) int32 expert assignment
     num_experts: int,
     capacity: int,
     *,
@@ -94,20 +94,41 @@ def sort_dispatch(
         buffer; dropped (over-capacity) entries point at slot E*capacity
         (a trash slot — the overflow block).
       kept (n*k,) bool; counts (E,) tokens per expert pre-clamp.
+
+    A 2-D ``expert_id`` (L, n*k) dispatches L independent routing problems
+    (e.g. every MoE layer of a step) in ONE call and one trace — the
+    batch-axis-native form (DESIGN.md §6): per-row stable partitions,
+    outputs gain the leading L dimension.  The 1-D path is the L=1 case
+    of the same implementation, so per-layer parity is structural.
     """
-    m = expert_id.shape[0]
+    if expert_id.ndim == 2:
+        return _sort_dispatch_batched(expert_id, num_experts, capacity, tile)
+    slot, kept, counts = _sort_dispatch_batched(
+        expert_id[None, :], num_experts, capacity, tile
+    )
+    return slot[0], kept[0], counts[0]
+
+
+def _sort_dispatch_batched(
+    expert_id: jax.Array, num_experts: int, capacity: int, tile: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-layer routing in one call: L stable partitions, one trace."""
+    L, m = expert_id.shape
     t = min(tile, m)
     if m % t:
-        t = m  # single tile fallback for odd sizes
-    perm, offsets = partition_permutation(expert_id, num_experts, t)
-    # rank of each entry within its expert: position - expert offset
-    inv = jnp.zeros((m,), jnp.int32).at[perm].set(
-        jnp.arange(m, dtype=jnp.int32), mode="promise_in_bounds"
-    )
-    rank = inv - jnp.take(offsets[:-1], expert_id, axis=0)
+        t = m
+    perm, offsets = jax.vmap(
+        lambda e: partition_permutation(e, num_experts, t)
+    )(expert_id)  # (L, m), (L, E+1)
+    inv = jax.vmap(
+        lambda p: jnp.zeros((m,), jnp.int32).at[p].set(
+            jnp.arange(m, dtype=jnp.int32), mode="promise_in_bounds"
+        )
+    )(perm)
+    rank = inv - jnp.take_along_axis(offsets[:, :-1], expert_id, axis=1)
     kept = rank < capacity
     slot = jnp.where(kept, expert_id * capacity + rank, num_experts * capacity)
-    counts = jnp.diff(offsets)
+    counts = jnp.diff(offsets, axis=1)
     return slot, kept, counts
 
 

@@ -11,14 +11,24 @@ single monolithic sort entry point:
   segmented_sort      batched independent segments in one composite pass
   unique / run_length sort + equality-bucket boundary extraction
   group_by            grouping via partition / Pallas kernel / full sort
+  batched_*           batch-axis-native (B, n) sort / argsort / topk /
+                      bottomk — all rows in one trace (DESIGN.md §6)
   keyspace            total-order uint bijection for float/int keys
-  PlanCache           (op, n, dtype) -> tuned, jitted, persisted callable
+  PlanCache           (op, [B,] n, dtype) -> tuned, jitted, persisted callable
 
-Production call sites: ``serve.scheduler`` (bottomk), ``data.pipeline``
-(argsort via the plan cache), ``examples/moe_routing.py`` (group_by).
+Production call sites: ``serve.scheduler`` (bottomk, batched across
+admission queues), ``data.pipeline`` (plan-cached argsort, batched across
+shards), ``models.moe`` / ``examples/moe_routing.py`` (group_by; batched
+sort_dispatch across layers).
 """
 from repro.core.ips4o import SortConfig
 from repro.ops import keyspace
+from repro.ops.batched import (
+    batched_argsort,
+    batched_bottomk,
+    batched_sort,
+    batched_topk,
+)
 from repro.ops.groupby import Groups, group_by, run_length, unique
 from repro.ops.plan import PlanCache, default_cache, get_sorter
 from repro.ops.segmented import segmented_sort
@@ -32,6 +42,10 @@ __all__ = [
     "argsort",
     "topk",
     "bottomk",
+    "batched_sort",
+    "batched_argsort",
+    "batched_topk",
+    "batched_bottomk",
     "segmented_sort",
     "unique",
     "run_length",

@@ -104,6 +104,15 @@ def group_by(
     static.  Without it, keys are arbitrary (``method="sort"``): a full
     NaN-safe sort groups equal keys, ``counts`` comes back (n,)-padded and
     ``num_groups`` is a traced scalar.
+
+    >>> import jax.numpy as jnp
+    >>> g = group_by(jnp.asarray([2, 0, 2, 1]), num_groups=3)
+    >>> g.keys.tolist()
+    [0, 1, 2, 2]
+    >>> g.counts.tolist()
+    [1, 1, 2]
+    >>> g.perm.tolist()  # stable within a group
+    [1, 3, 0, 2]
     """
     n = keys.shape[0]
     if keys.ndim != 1:
@@ -165,7 +174,15 @@ def unique(
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Distinct keys, ascending.  Returns (values, counts, num_unique):
     ``values``/``counts`` are (n,)-padded, valid for the first
-    ``num_unique`` entries (entries beyond that are unspecified)."""
+    ``num_unique`` entries (entries beyond that are unspecified).
+
+    >>> import jax.numpy as jnp
+    >>> vals, counts, num = unique(jnp.asarray([3, 1, 3, 1, 1]))
+    >>> int(num)
+    2
+    >>> (vals[:2].tolist(), counts[:2].tolist())
+    ([1, 3], [3, 2])
+    """
     n = keys.shape[0]
     if n == 0:
         return keys, jnp.zeros((0,), jnp.int32), jnp.zeros((), jnp.int32)
@@ -190,6 +207,13 @@ def run_length(
     (entries beyond num_runs are unspecified).
     Equality is keyspace equality, so NaN runs and -0.0/+0.0 behave
     deterministically (NaN == NaN, -0.0 != +0.0).
+
+    >>> import jax.numpy as jnp
+    >>> vals, lens, num = run_length(jnp.asarray([5, 5, 2, 2, 2, 5]))
+    >>> int(num)
+    3
+    >>> (vals[:3].tolist(), lens[:3].tolist())
+    ([5, 2, 5], [2, 3, 1])
     """
     n = keys.shape[0]
     if n == 0:

@@ -1,4 +1,4 @@
-"""Tuned plan cache: (op, n, dtype) -> jitted callable with a tuned config.
+"""Tuned plan cache: (op, [B,] n, dtype) -> jitted callable with a tuned config.
 
 Per-(n, dtype, distribution) tuning is where the remaining constant
 factors of the engine live (cf. *Towards Parallel Learned Sorting*): the
@@ -22,10 +22,19 @@ that decision:
     skipped off-TPU above ``_PALLAS_TUNE_MAX`` elements, where interpret
     mode would dominate the sweep) and ``engine_hint`` feeds the winner
     back to ``SortConfig(engine="auto")`` callers.  Plans persisted before
-    the engine dimension existed load unchanged (the field defaults).
+    the engine dimension existed load unchanged (the field defaults);
+  * **batched shapes are a key dimension** (DESIGN.md §6): ``batch=B``
+    keys a plan under (op, B, n, dtype) and builds/sweeps the
+    ``repro.ops.batched`` entry point over a (B, n) synthetic draw —
+    batched and unbatched plans for the same row length never collide.
+    Schema tolerance cuts the other way too: plan entries written by
+    *pre-batch* schemas (extra/unknown config fields) are migrated — the
+    known fields load, the foreign ones are dropped and the entry is
+    rewritten on the next save — instead of being discarded to defaults.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -41,6 +50,8 @@ from repro.core.ips4o import SortConfig, plan_levels
 __all__ = ["PlanCache", "get_sorter", "default_cache"]
 
 _OPS = ("sort", "argsort", "topk", "bottomk")
+
+_CFG_FIELDS = frozenset(f.name for f in dataclasses.fields(SortConfig))
 
 
 def _default_path() -> str:
@@ -89,21 +100,30 @@ def _candidates(n: int, engines: tuple = ("xla",)) -> list:
     return out
 
 
-def _build(op: str, cfg: SortConfig, k: Optional[int]) -> Callable:
+def _build(op: str, cfg: SortConfig, k: Optional[int], batch: Optional[int] = None) -> Callable:
     # local imports: plan is imported by repro.ops.__init__ alongside these
     from repro.ops.sort import argsort, sort
     from repro.ops.topk import bottomk, topk
 
-    if op == "sort":
-        f = lambda keys: sort(keys, cfg=cfg)
-    elif op == "argsort":
-        f = lambda keys: argsort(keys, cfg=cfg)
-    elif op == "topk":
-        f = lambda keys: topk(keys, k, cfg=cfg)
-    elif op == "bottomk":
-        f = lambda keys: bottomk(keys, k, cfg=cfg)
+    if batch is not None:
+        from repro.ops.batched import (
+            batched_argsort,
+            batched_bottomk,
+            batched_sort,
+            batched_topk,
+        )
+
+        fns = {"sort": batched_sort, "argsort": batched_argsort,
+               "topk": batched_topk, "bottomk": batched_bottomk}
     else:
+        fns = {"sort": sort, "argsort": argsort, "topk": topk, "bottomk": bottomk}
+    if op not in fns:
         raise ValueError(f"unknown op {op!r}; expected one of {_OPS}")
+    base = fns[op]
+    if op in ("topk", "bottomk"):
+        f = lambda keys: base(keys, k, cfg=cfg)
+    else:
+        f = lambda keys: base(keys, cfg=cfg)
     return jax.jit(f)
 
 
@@ -118,7 +138,20 @@ def _bench(f: Callable, x: jax.Array, iters: int = 3) -> float:
 
 
 class PlanCache:
-    """Process-level cache of tuned sorter plans; JSON-persisted."""
+    """Process-level cache of tuned sorter plans; JSON-persisted.
+
+    >>> import os, tempfile
+    >>> import jax.numpy as jnp
+    >>> pc = PlanCache(path=os.path.join(tempfile.mkdtemp(), "plans.json"))
+    >>> f = pc.get_sorter(4, jnp.float32)
+    >>> f(jnp.asarray([3.0, 1.0, 2.0, 0.0])).tolist()
+    [0.0, 1.0, 2.0, 3.0]
+    >>> pc.config_for("sort", 4, jnp.float32).engine  # no tuned plan: defaults
+    'xla'
+    >>> fb = pc.get_sorter(4, jnp.int32, "argsort", batch=2)  # batched plans
+    >>> fb(jnp.asarray([[30, 10, 20, 0], [1, 2, 3, 4]])).tolist()
+    [[3, 1, 2, 0], [0, 1, 2, 3]]
+    """
 
     def __init__(self, path: Optional[str] = None):
         self.path = _default_path() if path is None else path
@@ -133,8 +166,12 @@ class PlanCache:
 
     # -- keys ---------------------------------------------------------------
     @staticmethod
-    def _key(op: str, n: int, dtype, k: Optional[int]) -> str:
-        key = f"{op}:n={n}:dtype={jnp.dtype(dtype).name}"
+    def _key(op: str, n: int, dtype, k: Optional[int], batch: Optional[int] = None) -> str:
+        """Plan key.  Unbatched keys keep the original (pre-batch) format so
+        plans persisted before the batch dimension existed still match;
+        batched keys insert ``B=``: ``sort:B=32:n=4096:dtype=float32``."""
+        b = f"B={batch}:" if batch is not None else ""
+        key = f"{op}:{b}n={n}:dtype={jnp.dtype(dtype).name}"
         return key + (f":k={k}" if k is not None else "")
 
     # -- persistence --------------------------------------------------------
@@ -148,37 +185,80 @@ class PlanCache:
         os.replace(tmp, self.path)
 
     # -- plan selection -----------------------------------------------------
+    def _coerce_config(self, key: str) -> Optional[SortConfig]:
+        """Load a persisted plan's config, tolerating foreign schemas.
+
+        Pre-batch schemas stored fields ``SortConfig`` no longer knows
+        (e.g. a ``batch`` recorded inside the config); instead of
+        discarding the whole tuned plan, the known fields load and the
+        entry is migrated in place (rewritten at the next ``_save``).  A
+        config with *no* known fields — or an entry that is not even a
+        dict — is genuinely foreign -> None (defaults, never a crash).
+        """
+        entry = self._plans.get(key)
+        if not isinstance(entry, dict):
+            return None
+        raw = entry.get("config")
+        if not isinstance(raw, dict):
+            return None
+        # keep only known fields whose JSON value kind matches the default's
+        # (dataclasses don't validate, so a {"tile": "big"} would otherwise
+        # construct fine and crash later inside plan_levels / jit)
+        defaults = SortConfig()
+        known = {
+            f: v
+            for f, v in raw.items()
+            if f in _CFG_FIELDS and isinstance(v, type(getattr(defaults, f)))
+        }
+        if not known:
+            return None
+        cfg = SortConfig(**known)
+        if known != raw:
+            self._plans[key]["config"] = known  # migrate the pre-batch entry
+        return cfg
+
     def config_for(
-        self, op: str, n: int, dtype, k: Optional[int] = None, tune: bool = False
+        self,
+        op: str,
+        n: int,
+        dtype,
+        k: Optional[int] = None,
+        tune: bool = False,
+        batch: Optional[int] = None,
     ) -> SortConfig:
         """The SortConfig a sorter for this key would use (tuning if asked)."""
-        key = self._key(op, n, dtype, k)
+        key = self._key(op, n, dtype, k, batch)
         if key in self._plans:
-            try:
-                return SortConfig(**self._plans[key]["config"])
-            except (TypeError, KeyError):
-                pass  # stale/foreign plan schema: fall through to defaults
+            cfg = self._coerce_config(key)
+            if cfg is not None:
+                return cfg
         if tune:
-            return self._autotune(op, n, dtype, k)
+            return self._autotune(op, n, dtype, k, batch)
         return SortConfig()
 
-    def _autotune(self, op: str, n: int, dtype, k: Optional[int]) -> SortConfig:
-        key = self._key(op, n, dtype, k)
+    def _autotune(
+        self, op: str, n: int, dtype, k: Optional[int], batch: Optional[int] = None
+    ) -> SortConfig:
+        key = self._key(op, n, dtype, k, batch)
         dtype = jnp.dtype(dtype)
         rng = np.random.default_rng(0)
+        shape = (batch, n) if batch is not None else (n,)
+        count = n if batch is None else batch * n
         if jnp.issubdtype(dtype, jnp.floating):
-            x = jnp.asarray(rng.standard_normal(n).astype(np.float32)).astype(dtype)
+            x = jnp.asarray(
+                rng.standard_normal(count).astype(np.float32).reshape(shape)
+            ).astype(dtype)
         else:
             info = jnp.iinfo(dtype)
             # draw in the target dtype: uint64's max overflows numpy's
             # default int64 draw bounds
             x = jnp.asarray(
-                rng.integers(info.min, info.max, n, endpoint=False,
-                             dtype=np.dtype(dtype.name))
+                rng.integers(info.min, info.max, count, endpoint=False,
+                             dtype=np.dtype(dtype.name)).reshape(shape)
             )
         best_cfg, best_t = SortConfig(), float("inf")
         for cfg in _candidates(n, _engines_for(n)):
-            t = _bench(_build(op, cfg, k), x)
+            t = _bench(_build(op, cfg, k, batch), x)
             if t < best_t:
                 best_cfg, best_t = cfg, t
         self._plans[key] = {
@@ -190,17 +270,25 @@ class PlanCache:
         self._save()
         return best_cfg
 
-    def engine_hint(self, n: int, dtype) -> Optional[str]:
+    def engine_hint(self, n: int, dtype, batch: Optional[int] = None) -> Optional[str]:
         """Persisted engine choice for a same-shape "sort" plan, or None.
 
         This is what ``SortConfig(engine="auto")`` resolves through
-        (``core.ips4o.resolve_engine``): a tuned plan's engine wins; with
-        no plan the caller falls back to the backend heuristic.
+        (``core.ips4o.resolve_engine`` unbatched,
+        ``ops.batched.with_engine_batched`` batched): a tuned plan's engine
+        wins; a batched caller with no batched plan inherits the unbatched
+        row-shape plan's engine (same kernels, same row geometry); with no
+        plan at all the caller falls back to the backend heuristic.
         """
-        plan = self._plans.get(self._key("sort", n, dtype, None))
-        if not plan:
+        plan = self._plans.get(self._key("sort", n, dtype, None, batch))
+        if not isinstance(plan, dict) and batch is not None:
+            plan = self._plans.get(self._key("sort", n, dtype, None))
+        if not isinstance(plan, dict):
             return None
-        engine = plan.get("engine", plan.get("config", {}).get("engine"))
+        engine = plan.get("engine")
+        if engine is None:
+            cfg = plan.get("config")
+            engine = cfg.get("engine") if isinstance(cfg, dict) else None
         return engine if engine in ("xla", "pallas") else None
 
     # -- public entry -------------------------------------------------------
@@ -212,8 +300,12 @@ class PlanCache:
         *,
         k: Optional[int] = None,
         tune: bool = False,
+        batch: Optional[int] = None,
     ) -> Callable:
-        """Cached jitted callable for ``op`` over (n,)-shaped ``dtype`` keys.
+        """Cached jitted callable for ``op`` over (n,)-shaped ``dtype`` keys
+        — or, with ``batch=B``, over (B, n)-shaped keys via the
+        ``repro.ops.batched`` entry points (plans keyed per (op, B, n,
+        dtype), so ragged batch shapes each get their own plan).
 
         ``k`` is required (and static) for "topk"/"bottomk".  With
         ``tune=True`` a missing plan triggers the autotune sweep; the
@@ -223,12 +315,12 @@ class PlanCache:
             raise ValueError(f"unknown op {op!r}; expected one of {_OPS}")
         if op in ("topk", "bottomk") and k is None:
             raise ValueError(f"op={op!r} requires k")
-        key = self._key(op, n, dtype, k)
+        key = self._key(op, n, dtype, k, batch)
         f = self._compiled.get(key)
         # tune=True with no persisted plan must not be satisfied by an
         # untuned memoized callable — run the sweep and rebuild
         if f is None or (tune and key not in self._plans):
-            f = _build(op, self.config_for(op, n, dtype, k, tune=tune), k)
+            f = _build(op, self.config_for(op, n, dtype, k, tune=tune, batch=batch), k, batch)
             self._compiled[key] = f
         return f
 
@@ -237,5 +329,11 @@ default_cache = PlanCache()
 
 
 def get_sorter(n: int, dtype, op: str = "sort", **kw) -> Callable:
-    """Module-level convenience over the default :class:`PlanCache`."""
+    """Module-level convenience over the default :class:`PlanCache`.
+
+    >>> import jax.numpy as jnp
+    >>> f = get_sorter(4, jnp.int32, op="argsort")
+    >>> f(jnp.asarray([30, 10, 20, 0])).tolist()
+    [3, 1, 2, 0]
+    """
     return default_cache.get_sorter(n, dtype, op, **kw)

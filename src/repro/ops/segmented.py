@@ -72,6 +72,12 @@ def segmented_sort(
       engine: partition-engine override ("xla" | "pallas" | "auto").
 
     Returns sorted keys, or (keys, values) when a payload is given.
+
+    >>> import jax.numpy as jnp
+    >>> keys = jnp.asarray([3.0, 1.0, 2.0, 2.0, 0.0])
+    >>> offsets = jnp.asarray([0, 3, 5], jnp.int32)
+    >>> segmented_sort(keys, offsets, 2).tolist()  # segments stay apart
+    [1.0, 2.0, 3.0, 0.0, 2.0]
     """
     from repro.ops.sort import with_engine
 

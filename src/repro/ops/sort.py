@@ -27,6 +27,11 @@ def with_engine(
     original (n, dtype), which is what the plan cache keys tuned plans
     under.  Deeper layers see the keyspace-encoded dtype and the padded n,
     so resolving any later would never match a persisted plan.
+
+    >>> with_engine(SortConfig(), "pallas").engine
+    'pallas'
+    >>> with_engine(SortConfig(engine="pallas"), None).engine
+    'pallas'
     """
     cfg = cfg if engine is None else replace(cfg, engine=engine)
     if cfg.engine == "auto" and keys is not None:
@@ -45,7 +50,15 @@ def sort(
 ):
     """Sort ``keys`` ascending (NaNs last, -0.0 before +0.0), optionally
     permuting a ``values`` pytree alongside.  Jit-compatible.  ``engine``
-    ("xla" | "pallas" | "auto") overrides ``cfg.engine`` for this call."""
+    ("xla" | "pallas" | "auto") overrides ``cfg.engine`` for this call.
+
+    >>> import jax.numpy as jnp
+    >>> sort(jnp.asarray([3.0, 1.0, 2.0])).tolist()
+    [1.0, 2.0, 3.0]
+    >>> k, v = sort(jnp.asarray([2, 1]), {"tag": jnp.asarray([20, 10])})
+    >>> (k.tolist(), v["tag"].tolist())  # payload rows follow their keys
+    ([1, 2], [10, 20])
+    """
     cfg = with_engine(cfg, engine, keys)
     enc = keyspace.encode(keys)
     if values is None:
@@ -63,7 +76,12 @@ def argsort(
 ) -> jax.Array:
     """Indices that sort ``keys`` ascending: ``keys[argsort(keys)]`` is
     sorted.  The index payload rides the existing values-pytree threading;
-    ties are in arbitrary (but deterministic) order."""
+    ties are in arbitrary (but deterministic) order.
+
+    >>> import jax.numpy as jnp
+    >>> argsort(jnp.asarray([30.0, 10.0, 20.0])).tolist()
+    [1, 2, 0]
+    """
     n = keys.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32)
     if n <= 1:

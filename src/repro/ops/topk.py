@@ -93,6 +93,13 @@ def bottomk(
     *maximum* of the total order, so ``bottomk`` only yields NaNs once
     every non-NaN key is taken (and, symmetrically, ``topk`` yields them
     first — the ``lax.top_k`` convention).
+
+    >>> import jax.numpy as jnp
+    >>> vals, idx = bottomk(jnp.asarray([4.0, 1.0, 3.0]), 2)
+    >>> vals.tolist()
+    [1.0, 3.0]
+    >>> idx.tolist()
+    [1, 2]
     """
     n = keys.shape[0]
     if keys.ndim != 1:
@@ -118,6 +125,13 @@ def topk(
     Same contract as ``jax.lax.top_k`` (modulo tie order); implemented as
     bottom-k of the complemented encoded keys — ``~u`` reverses the
     keyspace total order, so no descending variant of the engine is needed.
+
+    >>> import jax.numpy as jnp
+    >>> vals, idx = topk(jnp.asarray([1.0, 9.0, 3.0, 7.0]), 2)
+    >>> vals.tolist()
+    [9.0, 7.0]
+    >>> idx.tolist()
+    [1, 3]
     """
     n = keys.shape[0]
     if keys.ndim != 1:

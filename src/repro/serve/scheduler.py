@@ -16,18 +16,25 @@ Two serving-correctness details:
   * the queue is padded to the next power of two with sentinel keys and the
     sorter comes from the plan cache, so a queue that grows by one request
     per tick compiles O(log n) distinct shapes instead of one per length.
+
+Serving real traffic runs S continuous-batching groups (replicas, LoRA
+adapters, priority classes) side by side; :func:`admit_many` admits one
+step for ALL of them with a single batched rank-k call (DESIGN.md §6):
+queues pad to a shared (S_pad, n_pad) key matrix (both pow2, so ragged
+queue counts compile O(log S · log n) shapes) and one plan-cached
+``ops.batched_bottomk`` selects every group's batch at once.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.ops import plan
 
-__all__ = ["Request", "Scheduler"]
+__all__ = ["Request", "Scheduler", "admit_many"]
 
 
 @dataclass
@@ -65,25 +72,98 @@ class Scheduler:
             return []
         q = len(self.queue)
         kk = min(self.batch_size, q)
-        rem = np.asarray([r.remaining for r in self.queue], np.int64)
         n_pad = 1 << (q - 1).bit_length() if q > 1 else 1
-        comp = rem * n_pad + np.arange(q, dtype=np.int64)
-        sentinel = np.iinfo(np.int32).max
-        if comp.max() >= sentinel:
+        comp = self._composite_keys(n_pad)
+        if comp is None:
             # composite would overflow int32 (gigantic remaining x queue):
             # host-side stable selection keeps the same (remaining, arrival)
             # order at O(n log n) — vanishingly rare in practice
+            rem = np.asarray([r.remaining for r in self.queue], np.int64)
             order = np.lexsort((np.arange(q), rem))[:kk]
         else:
-            keys = np.full(n_pad, sentinel, np.int32)
-            keys[:q] = comp.astype(np.int32)
+            keys = np.full(n_pad, _SENTINEL, np.int32)
+            keys[:q] = comp
             f = plan.get_sorter(
                 n_pad, jnp.int32, "bottomk", k=min(self.batch_size, n_pad)
             )
             _, order = f(jnp.asarray(keys))
             order = np.asarray(order)
             order = order[order < q][:kk]  # drop sentinel pad slots
+        return self._take(order)
+
+    # -- shared selection plumbing (used by admit_many too) -----------------
+    def _composite_keys(self, n_pad: int) -> Optional[np.ndarray]:
+        """(remaining, arrival) composite int32 keys for the current queue,
+        or None when the composite would overflow int32."""
+        q = len(self.queue)
+        rem = np.asarray([r.remaining for r in self.queue], np.int64)
+        comp = rem * n_pad + np.arange(q, dtype=np.int64)
+        if q and comp.max() >= _SENTINEL:
+            return None
+        return comp.astype(np.int32)
+
+    def _take(self, order: np.ndarray) -> List[Request]:
+        """Pop the requests at queue positions ``order`` (selection order),
+        preserving the relative order of everything left behind."""
         batch = [self.queue[i] for i in order]
         picked = set(int(i) for i in order)
         self.queue = [r for i, r in enumerate(self.queue) if i not in picked]
         return batch
+
+
+_SENTINEL = np.iinfo(np.int32).max
+
+
+def admit_many(schedulers: Sequence[Scheduler]) -> List[List[Request]]:
+    """Admit one step for every scheduler with ONE batched rank-k call.
+
+    The batched form of :meth:`Scheduler.next_batch` (DESIGN.md §6): all S
+    admission queues become rows of one (S_pad, n_pad) composite-key
+    matrix — queues shorter than n_pad (and the pad rows beyond S) fill
+    with the int32 sentinel, both dims pad to powers of two so ragged
+    fleets compile O(log S · log n) shapes — and a single plan-cached
+    ``ops.batched_bottomk`` selects every group's admitted prefix.  Each
+    queue keeps the exact semantics of the unbatched path: shortest
+    remaining first, FIFO ties, the same int32-overflow host fallback per
+    queue.
+    """
+    results: List[List[Request]] = [[] for _ in schedulers]
+    lens = [len(s.queue) for s in schedulers]
+    n_max = max(lens, default=0)
+    if n_max == 0:
+        return results
+    n_pad = 1 << (n_max - 1).bit_length() if n_max > 1 else 1
+
+    rows: List[np.ndarray] = []
+    row_ids: List[int] = []
+    for i, s in enumerate(schedulers):
+        q = lens[i]
+        if q == 0:
+            continue
+        comp = s._composite_keys(n_pad)
+        if comp is None:  # per-queue overflow fallback, as in next_batch
+            rem = np.asarray([r.remaining for r in s.queue], np.int64)
+            order = np.lexsort((np.arange(q), rem))[: min(s.batch_size, q)]
+            results[i] = s._take(order)
+            continue
+        keys = np.full(n_pad, _SENTINEL, np.int32)
+        keys[:q] = comp
+        rows.append(keys)
+        row_ids.append(i)
+    if not rows:
+        return results
+
+    S = len(rows)
+    s_pad = 1 << (S - 1).bit_length() if S > 1 else 1
+    mat = np.full((s_pad, n_pad), _SENTINEL, np.int32)
+    mat[:S] = np.stack(rows)
+    kk = min(max(schedulers[i].batch_size for i in row_ids), n_pad)
+    f = plan.get_sorter(n_pad, jnp.int32, "bottomk", k=kk, batch=s_pad)
+    _, order = f(jnp.asarray(mat))
+    order = np.asarray(order)
+    for j, i in enumerate(row_ids):
+        s, q = schedulers[i], lens[i]
+        o = order[j]
+        o = o[o < q][: min(s.batch_size, q)]  # drop sentinel pad slots
+        results[i] = s._take(o)
+    return results

@@ -1,0 +1,30 @@
+"""Tier-1 wiring for the ``repro.ops`` doctest suite (ISSUE 3 satellite).
+
+CI also runs ``pytest --doctest-modules src/repro/ops`` in the docs job;
+this file puts the same examples under the tier-1 umbrella (``pytest -x -q``
+from the repo root), so a docstring example that rots fails the default
+test run, not just the docs job.  Every public ``repro.ops`` module must
+carry at least one runnable example.
+"""
+import doctest
+import importlib
+
+import pytest
+
+OPS_MODULES = [
+    "repro.ops.sort",
+    "repro.ops.topk",
+    "repro.ops.batched",
+    "repro.ops.segmented",
+    "repro.ops.groupby",
+    "repro.ops.keyspace",
+    "repro.ops.plan",
+]
+
+
+@pytest.mark.parametrize("name", OPS_MODULES)
+def test_ops_doctests(name):
+    mod = importlib.import_module(name)
+    result = doctest.testmod(mod, verbose=False)
+    assert result.attempted > 0, f"{name} has no doctest examples"
+    assert result.failed == 0, f"{name}: {result.failed} doctest(s) failed"
