@@ -8,11 +8,13 @@
   moe_dispatch       framework role   sort-based vs one-hot MoE dispatch
   sort_ops           DESIGN.md §5     repro.ops: topk vs full sort, group_by
   sort_batched       DESIGN.md §6     batched (B, n) sort vs loop-over-rows
+  sort_external      DESIGN.md §7     external_sort vs single-shot + merge
 
 ``python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`` prints one
 CSV block per table plus a Table-1-style summary, and writes every row to
 a machine-readable ``BENCH_sort.json`` (``--json PATH`` overrides) so
-each PR's perf trajectory is diffable.
+each PR's perf trajectory is diffable; ``--list`` prints the registered
+suites and exits.
 """
 from __future__ import annotations
 
@@ -29,6 +31,7 @@ MODULES = [
     "moe_dispatch",
     "sort_ops",
     "sort_batched",
+    "sort_external",
 ]
 
 
@@ -39,7 +42,14 @@ def main(argv=None) -> int:
                     help="comma-separated subset of benchmark modules")
     ap.add_argument("--json", default="BENCH_sort.json",
                     help="machine-readable output path ('' disables)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered benchmark suites and exit")
     args = ap.parse_args(argv)
+
+    if args.list:
+        for name in MODULES:
+            print(name)
+        return 0
 
     import importlib
 

@@ -1,0 +1,111 @@
+"""External (out-of-core) sort vs single-shot, plus merge throughput
+(DESIGN.md §7).
+
+Two claims to evidence:
+
+  * **overhead ceiling** — at an n where the data still fits on device,
+    ``stream.external_sort`` (chunked run formation + merge tournament
+    with host spill between rounds, host-to-host end to end) must stay
+    within 2x of the single-shot plan-cached device sort measured over
+    the same host-to-host boundary (ISSUE 4 acceptance bar).  That ratio
+    is the price of streaming; above device memory the single-shot path
+    simply does not exist.
+  * **merge throughput** — the k-way merge primitive itself (device-
+    resident, jitted), both engines, at several fan-ins: Meps rows so the
+    merge-path kernel's trajectory is trackable per PR.
+
+One shared row schema (run.py prints one header per module): the
+external rows leave the merge columns blank and vice versa, matching the
+``sort_ops`` convention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ops import plan
+from repro.stream import external_sort, merge
+
+from benchmarks.common import Row, bench
+
+HEADER = ["bench", "n", "chunks", "fanin", "engine",
+          "external_us", "single_us", "ratio", "merge_us", "meps"]
+
+
+def _row(**kw) -> Row:
+    r = {h: "" for h in HEADER}
+    r.update(kw)
+    return r
+
+
+def _external_rows(quick: bool) -> list:
+    rows: list[Row] = []
+    rng = np.random.default_rng(0)
+    sweeps = [(1 << 17, 4)] if quick else [(1 << 16, 4), (1 << 17, 4), (1 << 17, 8)]
+    for n, chunks in sweeps:
+        chunk = n // chunks
+        x = rng.standard_normal(n).astype(np.float32)
+
+        single = plan.default_cache.get_sorter(n, jnp.float32, "sort")
+
+        def single_shot():
+            # same host-to-host boundary as the external path
+            return np.asarray(single(jax.device_put(jnp.asarray(x))))
+
+        np.testing.assert_array_equal(external_sort(x, chunk_size=chunk), np.sort(x))
+        np.testing.assert_array_equal(single_shot(), np.sort(x))
+
+        t_ext = bench(lambda: external_sort(x, chunk_size=chunk), iters=5, agg="min")
+        t_one = bench(single_shot, iters=5, agg="min")
+        rows.append(_row(
+            bench="external_vs_single",
+            n=n,
+            chunks=chunks,
+            external_us=round(t_ext * 1e6, 1),
+            single_us=round(t_one * 1e6, 1),
+            ratio=round(t_ext / t_one, 2),
+            meps=round(n / t_ext / 1e6, 2),
+        ))
+    worst = max(r["ratio"] for r in rows)
+    print(f"-- external_sort overhead ceiling: {worst:.2f}x (bar: <= 2x on-device)")
+    return rows
+
+
+def _merge_rows(quick: bool) -> list:
+    rows: list[Row] = []
+    rng = np.random.default_rng(1)
+    run_len = 1 << 14
+    fanins = [2, 8] if quick else [2, 4, 8, 16]
+    for k in fanins:
+        runs = [
+            jnp.asarray(np.sort(rng.standard_normal(run_len).astype(np.float32)))
+            for _ in range(k)
+        ]
+        n = k * run_len
+        for engine in ("xla", "pallas"):
+            f = jax.jit(lambda *rs, e=engine: merge(list(rs), engine=e))
+            out = np.asarray(f(*runs))
+            np.testing.assert_array_equal(
+                out, np.sort(np.concatenate([np.asarray(r) for r in runs]))
+            )
+            t = bench(lambda: f(*runs), iters=5, agg="min")
+            rows.append(_row(
+                bench="merge_throughput",
+                n=n,
+                fanin=k,
+                engine=engine,
+                merge_us=round(t * 1e6, 1),
+                meps=round(n / t / 1e6, 2),
+            ))
+    return rows
+
+
+def run(quick: bool = False):
+    return _external_rows(quick) + _merge_rows(quick)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run(quick=True), HEADER)

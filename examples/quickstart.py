@@ -1,4 +1,4 @@
-"""Quickstart: the IPS4o sorting library in six snippets.
+"""Quickstart: the IPS4o sorting library in seven snippets.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -57,4 +57,20 @@ vals, idx = batched_topk(xb, 4)                # per-row top-k, same call shape
 assert bool(jnp.all(vals[:, 0] == xb.max(axis=1)))
 print(f"6. batched: {xb.shape[0]} rows x {xb.shape[1]} keys sorted in one "
       "trace; per-row top-4 via batched_topk")
+
+# 7. Streaming / out-of-core (DESIGN.md §7): datasets larger than one device
+#    allocation — IPS4o run formation + a stable merge-path k-way merge ------
+from repro.stream import external_sort, merge, streaming_topk
+
+host = np.random.default_rng(2).standard_normal(1 << 16).astype(np.float32)
+ys = external_sort(host, chunk_size=1 << 14)   # 4 chunks, never all on device
+assert (ys[:-1] <= ys[1:]).all()
+runs = [jnp.sort(jnp.asarray(host[: 1 << 13])),  # device-resident k-way merge
+        jnp.sort(jnp.asarray(host[1 << 13 : 1 << 14]))]
+m = merge(runs)                                # stable; engine="pallas" for the
+assert bool(jnp.all(m[:-1] <= m[1:]))          # merge-path kernel
+tv, ti = streaming_topk(host, 8, chunk_size=1 << 14)  # bounded candidate buffer
+assert tv[0] == host.max()
+print(f"7. streaming: {host.shape[0]} host-resident keys external-sorted in "
+      "chunks; k-way merge + streaming top-8 (indices into the stream)")
 print("quickstart OK")

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from repro.core import sampling
 from repro.core.classifier import classify, classify_batched, classify_segmented
 from repro.core.partition import ENGINES, batched_stable_partition, stable_partition
+from repro.kernels import resolve_interpret
 
 __all__ = [
     "SortConfig",
@@ -259,7 +260,7 @@ def level_pass(
     # the fused classify kernel needs a 128-aligned n; the counting-rank
     # partition self-pads, so a pallas engine keeps its partition either way
     rows = _classify_rows(n) if engine == "pallas" else 0
-    interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret()
 
     off = None
     if rows:
@@ -521,7 +522,7 @@ def batched_level_pass(
     pad_n = n - n_real
     engine = resolve_engine(cfg, n, keys.dtype)
     rows = _classify_rows(n) if engine == "pallas" else 0
-    interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret()
 
     off = None
     if rows:

@@ -60,8 +60,14 @@ ENGINES = ("xla", "pallas")
 
 
 def _default_interpret() -> bool:
-    """Pallas kernels lower natively on TPU; everywhere else interpret."""
-    return jax.default_backend() != "tpu"
+    """Pallas kernels lower natively on TPU; everywhere else interpret.
+
+    Delegates to the one shared policy (``kernels.resolve_interpret``) so
+    every kernel call site in the repo resolves identically.
+    """
+    from repro.kernels import resolve_interpret
+
+    return resolve_interpret()
 
 
 def tile_histogram(bucket_tiles: jax.Array, nb: int) -> jax.Array:

@@ -12,7 +12,9 @@ contract the trainer relies on is:
     data-pipeline instantiation of the sorting engine (DESIGN.md §3).  The
     argsort comes from the plan cache (``ops.get_sorter``), so repeated
     packing calls at a fixed corpus size reuse one cached jitted sorter
-    (and pick up persisted tuned plans when present).
+    (and pick up persisted tuned plans when present); shard sets larger
+    than device memory pack out-of-core via ``repro.stream``
+    (``pack_by_length(..., chunk_size=...)``, DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -75,7 +77,7 @@ def _greedy_pack(lengths_np: np.ndarray, idx: np.ndarray, seq_len: int):
     return row_id, offset, len(rows)
 
 
-def pack_by_length(lengths: np.ndarray, seq_len: int):
+def pack_by_length(lengths: np.ndarray, seq_len: int, *, chunk_size: Optional[int] = None):
     """Greedy packing of documents into rows after an IPS4o length sort.
 
     Returns (row_id, offset, num_rows) per document.  Sorting by length
@@ -87,6 +89,14 @@ def pack_by_length(lengths: np.ndarray, seq_len: int):
     ``get_sorter(..., batch=S)``, DESIGN.md §6) sorts every shard's
     lengths in a single trace, then each shard packs greedily from its own
     row.  Returns a list of S (row_id, offset, num_rows) tuples.
+
+    **Out-of-core** (DESIGN.md §7): 1-D shard sets larger than one device
+    allocation pass ``chunk_size`` — the length argsort then runs through
+    ``repro.stream.external_argsort`` (chunked run formation + stable
+    merge), so only ``chunk_size`` lengths ever sit on device while the
+    pack itself stays host-side and identical.  The packing is unchanged
+    up to tie order within a chunk (both paths sort by length; greedy
+    packing consumes lengths, not indices, so row counts agree).
     """
     import jax.numpy as jnp
 
@@ -100,5 +110,10 @@ def pack_by_length(lengths: np.ndarray, seq_len: int):
         )
         return [_greedy_pack(lengths_np[i], idx[i], seq_len) for i in range(s)]
     n = len(lengths_np)
+    if chunk_size is not None and n > chunk_size:
+        from repro.stream import external_argsort
+
+        idx = external_argsort(lengths_np, chunk_size=chunk_size)
+        return _greedy_pack(lengths_np, idx, seq_len)
     idx = np.asarray(get_sorter(n, jnp.int32, op="argsort")(jnp.asarray(lengths_np)))
     return _greedy_pack(lengths_np, idx, seq_len)

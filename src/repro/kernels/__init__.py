@@ -1,3 +1,27 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from typing import Optional
+
+__all__ = ["resolve_interpret"]
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Shared off-TPU interpret policy for every Pallas kernel in the repo.
+
+    ``None`` (the default on all kernel entry points) resolves to "interpret
+    everywhere except a real TPU backend": on TPU the kernels lower natively,
+    anywhere else (this CPU container, GPU hosts) they run under the Pallas
+    interpreter for correctness.  An explicit bool always wins — tests use it
+    to force interpret-mode on any backend.
+
+    Keep every kernel default routed through here (classify, dispatch_rank,
+    bitonic, merge_path, the partition engines) so the policy changes in one
+    place, not per kernel.
+    """
+    if interpret is not None:
+        return interpret
+    import jax
+
+    return jax.default_backend() != "tpu"

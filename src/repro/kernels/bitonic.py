@@ -23,11 +23,13 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
 
 __all__ = ["bitonic_sort_windows"]
 
@@ -68,13 +70,20 @@ def _kernel(b_ref, k_ref, v_ref, bo_ref, ko_ref, vo_ref, *, W: int):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def bitonic_sort_windows(
-    bucket: jax.Array, keys: jax.Array, idx: jax.Array, *, interpret: bool = True
+    bucket: jax.Array,
+    keys: jax.Array,
+    idx: jax.Array,
+    *,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Sort each window (row) of (num_w, W) arrays by (bucket, key).
 
     W must be a power of two.  Returns permuted (bucket, keys, idx).
     VMEM per grid step: 3 arrays * W * 4 B (W=8192 -> 96 KiB).
+    ``interpret=None`` resolves through the shared off-TPU policy
+    (``kernels.resolve_interpret``).
     """
+    interpret = resolve_interpret(interpret)
     num_w, W = keys.shape
     if W & (W - 1):
         raise ValueError(f"W={W} must be a power of two")

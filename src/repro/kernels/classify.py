@@ -38,13 +38,14 @@ dispatches of the unbatched kernel.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.sampling import sentinel_for
+from repro.kernels import resolve_interpret
 
 __all__ = ["classify_histogram", "classify_histogram_batched"]
 
@@ -75,13 +76,14 @@ def classify_histogram(
     *,
     k: int,
     rows: int = 32,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Classify ``keys`` (n,) against ``splitters`` (k-1,).
 
     Returns (bucket ids (n,) int32 in [0, 2k), per-tile histogram
     (num_tiles, 2k) int32).  n must be a multiple of rows*128.
     """
+    interpret = resolve_interpret(interpret)
     n = keys.shape[0]
     tile = rows * LANES
     if n % tile:
@@ -124,7 +126,7 @@ def classify_histogram_batched(
     *,
     k: int,
     rows: int = 32,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Classify ``keys`` (B, n) against per-row ``splitters`` (B, k-1).
 
@@ -133,6 +135,7 @@ def classify_histogram_batched(
     (bucket ids (B, n) int32 in [0, 2k), per-tile histograms
     (B, num_tiles, 2k) int32).  n must be a multiple of rows*128.
     """
+    interpret = resolve_interpret(interpret)
     B, n = keys.shape
     tile = rows * LANES
     if n % tile:

@@ -31,11 +31,14 @@ per-row partitions in one kernel launch.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import resolve_interpret
 
 __all__ = ["dispatch_ranks", "partition_ranks", "partition_ranks_batched"]
 
@@ -75,7 +78,7 @@ def dispatch_ranks(
     *,
     num_experts: int,
     rows: int = 8,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Destination slot per token for expert-major grouping.
 
@@ -86,6 +89,7 @@ def dispatch_ranks(
     Returns (n,) int32 destinations (a permutation when starts come from the
     true histogram).
     """
+    interpret = resolve_interpret(interpret)
     n = expert_id.shape[0]
     tile = rows * LANES
     if n % tile:
@@ -133,7 +137,7 @@ def partition_ranks(
     *,
     nb: int,
     rows: int = 8,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Stable counting destination per element, vectorized over buckets.
 
@@ -148,6 +152,7 @@ def partition_ranks(
     elements with the same bucket — the stable partition permutation's
     scatter index (identical to the XLA per-tile-argsort placement).
     """
+    interpret = resolve_interpret(interpret)
     n = bucket.shape[0]
     tile = rows * LANES
     n_pad = -(-n // tile) * tile
@@ -198,7 +203,7 @@ def partition_ranks_batched(
     *,
     nb: int,
     rows: int = 8,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Per-row stable counting destinations, batch grid dimension (B, tiles).
 
@@ -213,6 +218,7 @@ def partition_ranks_batched(
     elements in the same bucket — B independent stable partitions computed
     by one kernel, counters resetting at each row's first tile.
     """
+    interpret = resolve_interpret(interpret)
     B, n = bucket.shape
     tile = rows * LANES
     n_pad = -(-n // tile) * tile

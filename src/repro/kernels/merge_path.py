@@ -1,0 +1,168 @@
+"""Pallas TPU kernel: branchless merge-path stable 2-way merge.
+
+The streaming subsystem (DESIGN.md §7) decomposes an out-of-core sort into
+IPS4o-sorted runs plus k-way merging; this kernel is the merge half.  The
+classic CPU merge is a data-dependent two-pointer walk — poison on a VPU
+for the same reason insertion sort is (every step is a branch on data).
+The TPU formulation splits the work in two branch-free stages:
+
+  1. **Diagonal partition** (`merge_path_partition`, plain XLA): for every
+     output-tile boundary d = t*T, a binary search on the merge-path
+     diagonal finds i(d) = #A-elements among the first d outputs of the
+     *stable* merge (ties go to A).  All diagonals search in parallel —
+     one fori_loop of ceil(log2 nA)+1 dense gather steps, no kernel needed.
+  2. **In-tile merge** (the Pallas kernel): tile t owns output range
+     [d_t, d_{t+1}) which merge-path guarantees is exactly
+     A[ia:ia+la] ++ B[ja:ja+lb].  Each element's in-tile destination is its
+     cross-rank, computed by a dense (T, T) broadcast compare — strict
+     ``<`` counting B-before-A and ``<=`` counting A-before-B, the same
+     tie discipline as the partition — and the output permutation
+     materializes through a one-hot contraction.  Zero gathers, zero
+     divergence: the merge analogue of the classify kernel's
+     "lane-parallel dense compare instead of pointer chase".
+
+The kernel emits a *permutation* (int32 source index into ``A ++ B``), not
+merged keys: the wrapper layers (``repro.stream.merge``) gather keys and
+arbitrary payload pytrees through it, which is also what makes the merge
+trivially stable for (key, payload) rows.
+
+Per-tile scalars (window starts/lengths) ride in as a (num_tiles, 4) array
+consumed through a per-tile BlockSpec — the same idiom as flash_decode's
+``length`` operand — and the windows themselves are dynamic ``pl.ds``
+slices of the full (VMEM-resident) runs.  VMEM budget: both runs + the
+(T, T) compare/one-hot intermediates (T=256: ~0.5 MiB), which bounds a
+single kernel launch to runs of a few MiB; the streaming layer's pairwise
+passes keep individual merges under that by construction, and interpret
+mode (this container) has no such limit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
+
+__all__ = ["merge_path_partition", "merge_path_perm"]
+
+
+def merge_path_partition(a: jax.Array, b: jax.Array, d: jax.Array) -> jax.Array:
+    """#A-elements among the first ``d`` outputs of the stable merge of
+    sorted runs ``a`` and ``b`` (ties to A), for every diagonal in ``d``.
+
+    For each d the answer i is the largest value in
+    [max(0, d-nB), min(d, nA)] with ``a[i-1] <= b[d-i]`` (the merge-path
+    cut condition with the stable tie rule); the predicate is monotone in
+    i, so a clamped binary search over all diagonals at once resolves in
+    ceil(log2(nA+1))+1 dense steps.  Keys must be totally ordered under
+    ``<=`` (the stream layer passes keyspace-encoded uints).
+    """
+    nA, nB = a.shape[0], b.shape[0]
+    d = d.astype(jnp.int32)
+    lo = jnp.maximum(0, d - nB)
+    hi = jnp.minimum(d, nA)
+    steps = int(nA).bit_length() + 1
+
+    def body(_, state):
+        lo, hi = state
+        active = lo < hi
+        mid = (lo + hi + 1) // 2  # candidate i in (lo, hi]
+        am = jnp.take(a, jnp.clip(mid - 1, 0, nA - 1))
+        bj = jnp.take(b, jnp.clip(d - mid, 0, nB - 1))
+        q = am <= bj  # Q(mid): A[mid-1] still precedes the first unchosen B
+        lo2 = jnp.where(q, mid, lo)
+        hi2 = jnp.where(q, hi, mid - 1)
+        return (jnp.where(active, lo2, lo), jnp.where(active, hi2, hi))
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def _merge_kernel(meta_ref, a_ref, b_ref, perm_ref, *, T: int, nA: int):
+    ia = meta_ref[0, 0]  # A window start
+    ja = meta_ref[0, 1]  # B window start
+    la = meta_ref[0, 2]  # A elements owned by this tile
+    lb = meta_ref[0, 3]  # B elements owned by this tile
+    aw = a_ref[0, pl.ds(ia, T)]  # (T,) — only the first la lanes are real
+    bw = b_ref[0, pl.ds(ja, T)]
+    av = aw[:, None]  # (T, 1)
+    bv = bw[None, :]  # (1, T)
+    p_col = jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0)  # local A index
+    q_row = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)  # local B index
+    valid_a = p_col < la
+    valid_b = q_row < lb
+    # cross-ranks, same tie rule as the diagonal partition: B precedes A
+    # only strictly (<), A precedes B on ties (<=)
+    b_before_a = jnp.sum(((bv < av) & valid_b).astype(jnp.int32), axis=1)  # (T,)
+    a_before_b = jnp.sum(((av <= bv) & valid_a).astype(jnp.int32), axis=0)  # (T,)
+    dest_a = p_col[:, 0] + b_before_a  # in-tile output slot of A[ia+p]
+    dest_b = q_row[0, :] + a_before_b  # in-tile output slot of B[ja+q]
+    # one-hot contraction: perm[r] = global source index of output slot r
+    # (slots r >= la+lb — final tile only — stay 0 and are sliced off)
+    oh_a = ((dest_a[:, None] == q_row) & valid_a).astype(jnp.int32)  # (T, T)
+    oh_b = ((dest_b[:, None] == q_row) & (p_col < lb)).astype(jnp.int32)
+    src_a = ia + p_col[:, 0]
+    src_b = nA + ja + p_col[:, 0]
+    perm_ref[0, :] = jnp.sum(oh_a * src_a[:, None], axis=0) + jnp.sum(
+        oh_b * src_b[:, None], axis=0
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def merge_path_perm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tile: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Stable-merge permutation of two sorted runs.
+
+    Args:
+      a, b: 1-D sorted arrays of one dtype, totally ordered under ``<=``
+        (raw NaNs are the callers' concern — ``repro.stream`` passes
+        keyspace-encoded keys, exactly like the sort entry points).
+      tile: output elements per grid step (the merge-path T).
+      interpret: shared off-TPU policy via ``kernels.resolve_interpret``.
+
+    Returns ``perm`` (nA+nB,) int32 with ``concat(a, b)[perm]`` equal to
+    the *stable* merge: ties keep all of ``a`` before ``b`` and preserve
+    order within each run — bit-identical to
+    ``jnp.argsort(concat, stable=True)`` whenever a and b are themselves
+    stably sorted prefixes of the concatenation.
+    """
+    interpret = resolve_interpret(interpret)
+    nA, nB = a.shape[0], b.shape[0]
+    n = nA + nB
+    if nA == 0 or nB == 0:  # nothing to interleave
+        return jnp.arange(n, dtype=jnp.int32)
+    num_tiles = -(-n // tile)
+    d = jnp.minimum(jnp.arange(num_tiles + 1, dtype=jnp.int32) * tile, n)
+    part = merge_path_partition(a, b, d).astype(jnp.int32)
+    ia = part[:-1]
+    la = jnp.diff(part)
+    ja = d[:-1] - ia
+    lb = jnp.diff(d) - la
+    meta = jnp.stack([ia, ja, la, lb], axis=1)  # (num_tiles, 4) int32
+    # pad run tails so the T-wide dynamic window loads never read OOB (the
+    # pad values are masked by la/lb and never influence a rank)
+    La, Lb = nA + tile, nB + tile
+    ap = jnp.pad(a, (0, tile)).reshape(1, La)
+    bp = jnp.pad(b, (0, tile)).reshape(1, Lb)
+
+    perm = pl.pallas_call(
+        functools.partial(_merge_kernel, T=tile, nA=nA),
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda t: (t, 0)),  # per-tile scalars
+            pl.BlockSpec((1, La), lambda t: (0, 0)),  # run A (whole)
+            pl.BlockSpec((1, Lb), lambda t: (0, 0)),  # run B (whole)
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_tiles, tile), jnp.int32),
+        interpret=interpret,
+    )(meta, ap, bp)
+    return perm.reshape(-1)[:n]

@@ -2,8 +2,9 @@
 
 These are the entry points the rest of the framework uses; each wrapper
 handles padding/reshaping, pytree payloads, and falls back to documented
-shapes.  ``interpret=True`` everywhere in this container (CPU); on real TPU
-hardware the same calls lower natively.
+shapes.  ``interpret=None`` resolves through the shared off-TPU policy
+(``kernels.resolve_interpret``): interpret everywhere but TPU, where the
+same calls lower natively.
 """
 from __future__ import annotations
 
@@ -40,7 +41,7 @@ def sort_blocks(
     *,
     k: int,
     block_elems: int,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Group homogeneous blocks by bucket with the in-place kernel.
 
@@ -57,7 +58,7 @@ def sort_blocks(
 
 
 def base_case_windows(
-    arrays: Any, fb: jax.Array, W: int, *, interpret: bool = True
+    arrays: Any, fb: jax.Array, W: int, *, interpret: Optional[bool] = None
 ) -> Any:
     """Pallas version of the overlapped-window base case (both passes).
 
@@ -97,7 +98,7 @@ def moe_group_tokens(
     num_experts: int,
     *,
     rows: int = 8,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Group tokens expert-major using the fused dispatch-rank kernel.
 

@@ -14,6 +14,7 @@ __all__ = [
     "permute_blocks_ref",
     "dispatch_ranks_ref",
     "partition_ranks_ref",
+    "merge_path_perm_ref",
 ]
 
 
@@ -74,6 +75,32 @@ def partition_ranks_ref(bucket: jax.Array, start: jax.Array, nb: int) -> jax.Arr
     rank = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=1)
     base = jnp.sum(onehot * start[None, :], axis=1)
     return (base + rank).astype(jnp.int32)
+
+
+def merge_path_perm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """jnp oracle for kernels/merge_path.py — and the "xla" merge engine.
+
+    The stable-merge permutation by rank arithmetic: element a[i] lands at
+    i + |{b < a[i]}| (strict: ties keep A first), b[j] at j + |{a <= b[j]}|.
+    Those destinations are disjoint and cover [0, nA+nB), so one scatter
+    yields the permutation — branchless under XLA (two searchsorteds), no
+    comparison sort.
+    """
+    nA, nB = a.shape[0], b.shape[0]
+    n = nA + nB
+    if nA == 0 or nB == 0:
+        return jnp.arange(n, dtype=jnp.int32)
+    ai = jnp.arange(nA, dtype=jnp.int32)
+    bi = jnp.arange(nB, dtype=jnp.int32)
+    pos_a = ai + jnp.searchsorted(b, a, side="left").astype(jnp.int32)
+    pos_b = bi + jnp.searchsorted(a, b, side="right").astype(jnp.int32)
+    return (
+        jnp.zeros((n,), jnp.int32)
+        .at[pos_a]
+        .set(ai, mode="promise_in_bounds")
+        .at[pos_b]
+        .set(nA + bi, mode="promise_in_bounds")
+    )
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0):

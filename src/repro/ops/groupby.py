@@ -71,10 +71,7 @@ def _int_group_perm(
             [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
         )
         start = jnp.concatenate([offsets[:-1], jnp.full((1,), n, jnp.int32)])
-        dest = dispatch_ranks(
-            ids, start, num_experts=num_groups + 1,
-            interpret=jax.default_backend() != "tpu",
-        )
+        dest = dispatch_ranks(ids, start, num_experts=num_groups + 1)
         perm = (
             jnp.zeros((n_pad,), jnp.int32)
             .at[dest]

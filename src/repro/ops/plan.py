@@ -30,7 +30,13 @@ that decision:
     Schema tolerance cuts the other way too: plan entries written by
     *pre-batch* schemas (extra/unknown config fields) are migrated — the
     known fields load, the foreign ones are dropped and the entry is
-    rewritten on the next save — instead of being discarded to defaults.
+    rewritten on the next save — instead of being discarded to defaults;
+  * the **stream: key family** (DESIGN.md §7) plans the out-of-core merge
+    geometry: ``stream:chunk=65536:fanin=8:dtype=float32`` records the
+    merge engine + merge-path tile for an external sort at that chunk
+    size x fan-in (``stream_plan``), tuned by timing a synthetic pairwise
+    merge at the chunk shape — the first-round merge every tournament
+    pass in ``repro.stream`` actually runs.
 """
 from __future__ import annotations
 
@@ -47,7 +53,7 @@ import numpy as np
 
 from repro.core.ips4o import SortConfig, plan_levels
 
-__all__ = ["PlanCache", "get_sorter", "default_cache"]
+__all__ = ["PlanCache", "StreamPlan", "get_sorter", "default_cache"]
 
 _OPS = ("sort", "argsort", "topk", "bottomk")
 
@@ -125,6 +131,23 @@ def _build(op: str, cfg: SortConfig, k: Optional[int], batch: Optional[int] = No
     else:
         f = lambda keys: base(keys, cfg=cfg)
     return jax.jit(f)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """Tuned geometry for one out-of-core merge family (DESIGN.md §7):
+    the merge engine and merge-path tile ``repro.stream`` uses for every
+    pairwise pass of an external sort at this chunk size x fan-in."""
+
+    chunk: int
+    fanin: int
+    merge_tile: int = 256
+    engine: str = "xla"
+
+
+# merge-path tiles the stream autotune sweeps (the kernel's (T, T) rank
+# matrix bounds the useful range)
+_STREAM_TILES = (128, 256, 512)
 
 
 def _bench(f: Callable, x: jax.Array, iters: int = 3) -> float:
@@ -290,6 +313,89 @@ class PlanCache:
             cfg = plan.get("config")
             engine = cfg.get("engine") if isinstance(cfg, dict) else None
         return engine if engine in ("xla", "pallas") else None
+
+    # -- stream: key family (out-of-core merge geometry) --------------------
+    @staticmethod
+    def _stream_key(chunk: int, fanin: int, dtype) -> str:
+        return f"stream:chunk={chunk}:fanin={fanin}:dtype={jnp.dtype(dtype).name}"
+
+    def stream_plan(
+        self,
+        chunk: int,
+        fanin: int,
+        dtype,
+        *,
+        tune: bool = False,
+        engine: Optional[str] = None,
+    ) -> StreamPlan:
+        """The merge geometry an external sort at (chunk, fanin, dtype)
+        should use.  A persisted ``stream:`` plan wins; ``tune=True``
+        sweeps (engine x merge tile) on a synthetic pairwise merge at the
+        chunk shape and persists the winner; otherwise the backend
+        heuristic picks the engine.  An explicit ``engine`` (not
+        None/"auto") overrides the engine while keeping the planned tile.
+
+        >>> import os, tempfile
+        >>> import jax.numpy as jnp
+        >>> pc = PlanCache(path=os.path.join(tempfile.mkdtemp(), "p.json"))
+        >>> pc.stream_plan(1024, 4, jnp.float32).engine  # no plan: heuristic
+        'xla'
+        >>> pc.stream_plan(1024, 4, jnp.float32, engine="pallas").engine
+        'pallas'
+        """
+        if engine == "auto":
+            engine = None
+        key = self._stream_key(chunk, fanin, dtype)
+        entry = self._plans.get(key)
+        cfg = entry.get("config") if isinstance(entry, dict) else None
+        if isinstance(cfg, dict):
+            tile = cfg.get("merge_tile")
+            eng = cfg.get("engine")
+            if isinstance(tile, int) and eng in ("xla", "pallas"):
+                return StreamPlan(chunk, fanin, tile, engine or eng)
+        if tune:
+            plan = self._autotune_stream(chunk, fanin, dtype)
+            if engine is not None:
+                plan = dataclasses.replace(plan, engine=engine)
+            return plan
+        default = engine or (
+            "pallas" if jax.default_backend() == "tpu" else "xla"
+        )
+        return StreamPlan(chunk, fanin, engine=default)
+
+    def _autotune_stream(self, chunk: int, fanin: int, dtype) -> StreamPlan:
+        from repro.stream.merge import merge as _merge  # lazy: stream layers on ops
+
+        key = self._stream_key(chunk, fanin, dtype)
+        dtype = jnp.dtype(dtype)
+        rng = np.random.default_rng(0)
+        if jnp.issubdtype(dtype, jnp.floating):
+            draw = rng.standard_normal(2 * chunk).astype(np.float32)
+            a, b = np.sort(draw[:chunk]), np.sort(draw[chunk:])
+            a, b = jnp.asarray(a).astype(dtype), jnp.asarray(b).astype(dtype)
+        else:
+            info = jnp.iinfo(dtype)
+            draw = rng.integers(info.min, info.max, 2 * chunk, endpoint=False,
+                                dtype=np.dtype(dtype.name))
+            a = jnp.asarray(np.sort(draw[:chunk]))
+            b = jnp.asarray(np.sort(draw[chunk:]))
+        best, best_t = StreamPlan(chunk, fanin), float("inf")
+        for eng in _engines_for(chunk):
+            for tile in _STREAM_TILES:
+                f = jax.jit(
+                    lambda x, e=eng, t=tile: _merge([x, b], engine=e, tile=t)
+                )
+                t = _bench(f, a)
+                if t < best_t:
+                    best, best_t = StreamPlan(chunk, fanin, tile, eng), t
+        self._plans[key] = {
+            "config": {"merge_tile": best.merge_tile, "engine": best.engine},
+            "engine": best.engine,
+            "us": round(best_t * 1e6, 1),
+            "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        self._save()
+        return best
 
     # -- public entry -------------------------------------------------------
     def get_sorter(

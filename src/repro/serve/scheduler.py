@@ -23,6 +23,14 @@ step for ALL of them with a single batched rank-k call (DESIGN.md §6):
 queues pad to a shared (S_pad, n_pad) key matrix (both pow2, so ragged
 queue counts compile O(log S · log n) shapes) and one plan-cached
 ``ops.batched_bottomk`` selects every group's batch at once.
+
+A restarted server also carries a **persisted backlog** — requests
+spilled at the previous shutdown, re-attached sorted
+(:meth:`Scheduler.attach_backlog`).  Admission then works on a *merged
+view* of persisted + live queues (DESIGN.md §7): the backlog is already a
+sorted run, the live candidates come out of ``bottomk`` sorted, and one
+stable 2-way ``repro.stream.merge`` interleaves them — backlog winning
+ties (it is strictly older, so FIFO is preserved across the restart).
 """
 from __future__ import annotations
 
@@ -53,9 +61,43 @@ class Request:
 class Scheduler:
     batch_size: int
     queue: List[Request] = field(default_factory=list)
+    backlog: List[Request] = field(default_factory=list)  # persisted, sorted
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def attach_backlog(self, reqs: Sequence[Request]) -> None:
+        """Attach a persisted queue (requests spilled by a previous server
+        session) as a sorted run: one plan-cached argsort on the same
+        composite (remaining, position) key as live admission, so the
+        backlog is ordered exactly the way :meth:`next_batch` consumes it.
+        Backlog requests are strictly older than anything live and win
+        admission ties (FIFO across the restart).
+
+        Repeated attaches stay sorted: the new run stable-merges into the
+        existing backlog (host-side — a stable argsort of the concatenation
+        of two sorted runs IS their stable merge), earlier attaches winning
+        ties.
+        """
+        reqs = list(reqs)
+        q = len(reqs)
+        if not q:
+            return
+        n_pad = 1 << (q - 1).bit_length() if q > 1 else 1
+        comp = _composite_of(reqs, n_pad)
+        if comp is None:  # int32 overflow: host-side stable order
+            rem = np.asarray([r.remaining for r in reqs], np.int64)
+            order = np.lexsort((np.arange(q), rem))
+        else:
+            keys = np.full(n_pad, _SENTINEL, np.int32)
+            keys[:q] = comp
+            order = np.asarray(
+                plan.get_sorter(n_pad, jnp.int32, "argsort")(jnp.asarray(keys))
+            )
+            order = order[order < q]
+        combined = self.backlog + [reqs[i] for i in order]
+        rem = np.asarray([r.remaining for r in combined], np.int64)
+        self.backlog = [combined[i] for i in np.argsort(rem, kind="stable")]
 
     def next_batch(self) -> List[Request]:
         """Admit up to batch_size requests, shortest-remaining-first,
@@ -67,11 +109,56 @@ class Scheduler:
         minimized, and only the admitted prefix is ever fully sorted.  The
         queue position *is* the arrival index (the queue is append-only
         between calls and removal preserves relative order).
+
+        With a persisted backlog attached, admission runs on the *merged
+        view*: the backlog prefix (already a sorted run) and the live
+        ``bottomk`` candidates (sorted by construction) interleave through
+        one stable 2-way ``stream.merge`` on the ``remaining`` key — the
+        stable tie rule admits backlog (older) requests first, and because
+        both inputs are sorted runs, the admitted set is a prefix of each.
         """
-        if not self.queue:
+        kk = min(self.batch_size, len(self.queue) + len(self.backlog))
+        if not kk:
             return []
+        order = self._select_live(min(self.batch_size, len(self.queue)))
+        if not self.backlog:
+            return self._take(order)
+        bk = np.asarray(
+            [r.remaining for r in self.backlog[: self.batch_size]], np.int64
+        )
+        lk = np.asarray([self.queue[i].remaining for i in order], np.int64)
+        if max(bk.max(initial=0), lk.max(initial=0)) < _SENTINEL:
+            from repro.stream import merge  # lazy: stream layers above serve
+
+            _, src = merge(
+                [jnp.asarray(bk.astype(np.int32)), jnp.asarray(lk.astype(np.int32))],
+                values=[
+                    jnp.arange(len(bk), dtype=jnp.int32),
+                    len(bk) + jnp.arange(len(lk), dtype=jnp.int32),
+                ],
+            )
+            src = np.asarray(src)
+        else:
+            # remaining overflows int32 (same hazard the composite path
+            # guards): host-side stable merge — the stable argsort of the
+            # concatenation of two sorted runs is exactly their merge
+            src = np.argsort(np.concatenate([bk, lk]), kind="stable")
+        src = src[:kk]
+        n_back = int(np.sum(src < len(bk)))  # a prefix of the backlog run
+        batch: List[Request] = []
+        live_iter = iter(self._take(order[: kk - n_back]))
+        back_iter = iter(self.backlog[:n_back])
+        self.backlog = self.backlog[n_back:]
+        for s in src:
+            batch.append(next(back_iter) if s < len(bk) else next(live_iter))
+        return batch
+
+    def _select_live(self, kk: int) -> np.ndarray:
+        """Selection order (queue positions) of the live admission
+        candidates — the bottomk path shared by both admission views."""
         q = len(self.queue)
-        kk = min(self.batch_size, q)
+        if not q or not kk:
+            return np.zeros((0,), np.int64)
         n_pad = 1 << (q - 1).bit_length() if q > 1 else 1
         comp = self._composite_keys(n_pad)
         if comp is None:
@@ -79,28 +166,21 @@ class Scheduler:
             # host-side stable selection keeps the same (remaining, arrival)
             # order at O(n log n) — vanishingly rare in practice
             rem = np.asarray([r.remaining for r in self.queue], np.int64)
-            order = np.lexsort((np.arange(q), rem))[:kk]
-        else:
-            keys = np.full(n_pad, _SENTINEL, np.int32)
-            keys[:q] = comp
-            f = plan.get_sorter(
-                n_pad, jnp.int32, "bottomk", k=min(self.batch_size, n_pad)
-            )
-            _, order = f(jnp.asarray(keys))
-            order = np.asarray(order)
-            order = order[order < q][:kk]  # drop sentinel pad slots
-        return self._take(order)
+            return np.lexsort((np.arange(q), rem))[:kk]
+        keys = np.full(n_pad, _SENTINEL, np.int32)
+        keys[:q] = comp
+        f = plan.get_sorter(
+            n_pad, jnp.int32, "bottomk", k=min(self.batch_size, n_pad)
+        )
+        _, order = f(jnp.asarray(keys))
+        order = np.asarray(order)
+        return order[order < q][:kk]  # drop sentinel pad slots
 
     # -- shared selection plumbing (used by admit_many too) -----------------
     def _composite_keys(self, n_pad: int) -> Optional[np.ndarray]:
         """(remaining, arrival) composite int32 keys for the current queue,
         or None when the composite would overflow int32."""
-        q = len(self.queue)
-        rem = np.asarray([r.remaining for r in self.queue], np.int64)
-        comp = rem * n_pad + np.arange(q, dtype=np.int64)
-        if q and comp.max() >= _SENTINEL:
-            return None
-        return comp.astype(np.int32)
+        return _composite_of(self.queue, n_pad)
 
     def _take(self, order: np.ndarray) -> List[Request]:
         """Pop the requests at queue positions ``order`` (selection order),
@@ -112,6 +192,17 @@ class Scheduler:
 
 
 _SENTINEL = np.iinfo(np.int32).max
+
+
+def _composite_of(reqs: Sequence[Request], n_pad: int) -> Optional[np.ndarray]:
+    """(remaining, position) composite int32 keys for a request list, or
+    None when the composite would overflow int32."""
+    q = len(reqs)
+    rem = np.asarray([r.remaining for r in reqs], np.int64)
+    comp = rem * n_pad + np.arange(q, dtype=np.int64)
+    if q and comp.max() >= _SENTINEL:
+        return None
+    return comp.astype(np.int32)
 
 
 def admit_many(schedulers: Sequence[Scheduler]) -> List[List[Request]]:
@@ -130,7 +221,7 @@ def admit_many(schedulers: Sequence[Scheduler]) -> List[List[Request]]:
     results: List[List[Request]] = [[] for _ in schedulers]
     lens = [len(s.queue) for s in schedulers]
     n_max = max(lens, default=0)
-    if n_max == 0:
+    if n_max == 0 and not any(s.backlog for s in schedulers):
         return results
     n_pad = 1 << (n_max - 1).bit_length() if n_max > 1 else 1
 
@@ -138,6 +229,11 @@ def admit_many(schedulers: Sequence[Scheduler]) -> List[List[Request]]:
     row_ids: List[int] = []
     for i, s in enumerate(schedulers):
         q = lens[i]
+        if s.backlog:
+            # merged persisted + live view: per-scheduler path (the merge
+            # against the backlog run is scheduler-local by construction)
+            results[i] = s.next_batch()
+            continue
         if q == 0:
             continue
         comp = s._composite_keys(n_pad)

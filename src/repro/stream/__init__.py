@@ -1,0 +1,46 @@
+"""repro.stream — out-of-core streaming sort (DESIGN.md §7).
+
+The journal version of the paper ("Engineering In-place (Shared-memory)
+Sorting Algorithms") formalizes the decomposition this package implements:
+IPS4o as the *run-forming* engine over device-sized chunks, plus a k-way
+merge as the recombination primitive.  Three layers:
+
+  runs.py   chunk a host-resident (or generator-fed) keyset, sort each
+            chunk with the plan-cached IPS4o engines, double-buffering
+            host->device transfers against the previous chunk's sort;
+  merge.py  stable k-way merge of sorted runs: a tournament of pairwise
+            merges, each a branchless merge-path pass
+            (``kernels/merge_path.py`` on the "pallas" engine, a
+            two-searchsorted rank merge on "xla" — same engine seam as
+            ``stable_partition``);
+  api.py    the streaming entry points: ``external_sort``,
+            ``external_argsort``, ``streaming_topk``,
+            ``streaming_group_by`` — host-orchestrated pipelines whose
+            device footprint is bounded by the chunk / pair being
+            processed, not the dataset.
+
+Production call sites: ``data.pipeline.pack_by_length`` (out-of-core
+length argsort for shard sets larger than device memory) and
+``serve.scheduler`` (admission from a merged view of persisted + live
+queues).
+"""
+from repro.stream.api import (
+    external_argsort,
+    external_sort,
+    streaming_group_by,
+    streaming_topk,
+)
+from repro.stream.merge import merge, merge_perm
+from repro.stream.runs import form_argsort_runs, form_runs, iter_chunks
+
+__all__ = [
+    "external_sort",
+    "external_argsort",
+    "merge",
+    "merge_perm",
+    "streaming_topk",
+    "streaming_group_by",
+    "form_runs",
+    "form_argsort_runs",
+    "iter_chunks",
+]

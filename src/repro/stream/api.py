@@ -1,0 +1,277 @@
+"""Streaming entry points: out-of-core sorts over host-resident data.
+
+Host-orchestrated pipelines over the run-formation (``stream.runs``) and
+merge (``stream.merge``) layers.  The common shape:
+
+  1. chunks stream host -> device under double buffering and come back as
+     sorted runs (device arrays, results not blocked on);
+  2. runs reduce through the pairwise merge tournament; between rounds the
+     merged results **spill to host** (``np.asarray``), so the device
+     footprint at any instant is one pair being merged — never the whole
+     dataset plus intermediates;
+  3. the merge geometry (engine + merge-path tile) comes from the plan
+     cache's ``stream:`` key family (chunk size x fan-in; DESIGN.md §5.4),
+     tuned once per machine with ``tune=True``.
+
+``streaming_topk`` and ``streaming_group_by`` never materialize the
+stream at all: they carry a bounded candidate / distinct-key buffer and
+refine it per chunk with the ops-layer primitives (``bottomk``/``topk``,
+``unique``) plus one 2-way merge.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ops import keyspace, plan
+from repro.stream.merge import merge
+from repro.stream.runs import Source, form_argsort_runs, form_runs, iter_chunks
+
+__all__ = [
+    "external_sort",
+    "external_argsort",
+    "streaming_topk",
+    "streaming_group_by",
+]
+
+# jitted per-shape closures for the host-orchestrated loops (each distinct
+# (shapes, static args) signature compiles once per process)
+_JIT: Dict[tuple, Callable] = {}
+
+
+def _jitted(key: tuple, build: Callable[[], Callable]) -> Callable:
+    f = _JIT.get(key)
+    if f is None:
+        f = _JIT[key] = jax.jit(build())
+    return f
+
+
+def _encode_runs(runs):
+    """Biject each run into the ordered-uint keyspace ONCE, before the
+    tournament: ``keyspace.encode`` is the identity on unsigned ints, so
+    every subsequent ``merge`` round is bijection-free — 2 encode/decode
+    passes total instead of 2 per round."""
+    out = []
+    for r in runs:
+        f = _jitted(("encode", r.shape, str(r.dtype)), lambda: keyspace.encode)
+        out.append(f(jnp.asarray(r)))
+    return out
+
+
+def _decode(u, dtype):
+    f = _jitted(("decode", u.shape, str(jnp.dtype(dtype))),
+                lambda: lambda enc: keyspace.decode(enc, dtype))
+    return np.asarray(f(jnp.asarray(u)))
+
+
+def _merge_pass(runs, cfg, payloads=None):
+    """One tournament round over host-resident runs: merge adjacent pairs
+    on device, spill each result back to host."""
+    out_k, out_v = [], []
+    for i in range(0, len(runs) - 1, 2):
+        a, b = jnp.asarray(runs[i]), jnp.asarray(runs[i + 1])
+        key = ("merge2", a.shape, b.shape, str(a.dtype),
+               cfg.engine, cfg.merge_tile, payloads is not None)
+        if payloads is None:
+            f = _jitted(key, lambda: lambda x, y: merge(
+                [x, y], engine=cfg.engine, tile=cfg.merge_tile))
+            out_k.append(np.asarray(f(a, b)))
+        else:
+            f = _jitted(key, lambda: lambda x, y, vx, vy: merge(
+                [x, y], values=[vx, vy],
+                engine=cfg.engine, tile=cfg.merge_tile))
+            k, v = f(a, b, jnp.asarray(payloads[i]), jnp.asarray(payloads[i + 1]))
+            out_k.append(np.asarray(k))
+            out_v.append(np.asarray(v))
+    if len(runs) % 2:
+        out_k.append(np.asarray(runs[-1]))
+        if payloads is not None:
+            out_v.append(np.asarray(payloads[-1]))
+    return (out_k, out_v) if payloads is not None else (out_k, None)
+
+
+def external_sort(
+    data: Source,
+    *,
+    chunk_size: int = 1 << 16,
+    engine: Optional[str] = None,
+    cache: Optional[plan.PlanCache] = None,
+    tune: bool = False,
+) -> np.ndarray:
+    """Sort a host-resident (or generator-fed) keyset larger than one
+    device allocation: IPS4o run formation + merge tournament with host
+    spill between rounds.
+
+    Value-identical to ``ops.sort`` of the concatenated stream — the
+    keyspace total order: NaNs last, -0.0 strictly before +0.0 (equal to
+    ``jnp.sort`` under ``==``; ``jnp.sort`` leaves -0.0/+0.0 grouped but
+    unordered).  ``engine`` overrides the merge engine; ``tune=True``
+    autotunes (and persists) the ``stream:`` plan for this chunk size x
+    fan-in.
+
+    >>> import numpy as np
+    >>> external_sort(np.asarray([5, 1, 4, 2, 3], np.int32), chunk_size=2).tolist()
+    [1, 2, 3, 4, 5]
+    """
+    cache = plan.default_cache if cache is None else cache
+    runs = form_runs(data, chunk_size, cache=cache, tune=tune)
+    if not runs:
+        return np.zeros((0,), np.asarray(data).dtype if isinstance(data, np.ndarray) else np.float32)
+    dtype = runs[0].dtype
+    cfg = cache.stream_plan(chunk_size, len(runs), dtype, tune=tune, engine=engine)
+    level = _encode_runs(runs)  # device arrays round 0; host after each spill
+    while len(level) > 1:
+        level, _ = _merge_pass(level, cfg)
+    return _decode(level[0], dtype)
+
+
+def external_argsort(
+    data: Source,
+    *,
+    chunk_size: int = 1 << 16,
+    engine: Optional[str] = None,
+    cache: Optional[plan.PlanCache] = None,
+    tune: bool = False,
+) -> np.ndarray:
+    """Indices (int32, into the concatenated stream) that sort it.
+
+    ``keys[idx]`` equals ``external_sort(keys)``; ties across chunk
+    boundaries keep chunk order (the merge is stable), ties within a
+    chunk are in the engine's deterministic argsort order.
+
+    >>> import numpy as np
+    >>> external_argsort(np.asarray([30, 10, 40, 20], np.int32), chunk_size=2).tolist()
+    [1, 3, 0, 2]
+    """
+    cache = plan.default_cache if cache is None else cache
+    pairs = form_argsort_runs(data, chunk_size, cache=cache, tune=tune)
+    if not pairs:
+        return np.zeros((0,), np.int32)
+    cfg = cache.stream_plan(chunk_size, len(pairs), pairs[0][0].dtype,
+                            tune=tune, engine=engine)
+    keys = _encode_runs([k for k, _ in pairs])  # only indices come back out
+    idxs = [i for _, i in pairs]
+    while len(keys) > 1:
+        keys, idxs = _merge_pass(keys, cfg, idxs)
+    return np.asarray(idxs[0])
+
+
+def streaming_topk(
+    data: Source,
+    k: int,
+    *,
+    chunk_size: int = 1 << 16,
+    largest: bool = True,
+    cache: Optional[plan.PlanCache] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k (or bottom-k) of a stream with a bounded candidate buffer.
+
+    Per chunk: the plan-cached rank-k partial sort (``ops.topk`` /
+    ``ops.bottomk`` — only the rank-covering prefix is ever base-case
+    sorted) yields that chunk's candidates; one stable 2-way merge against
+    the k-entry running buffer refines it.  The buffer lives in the
+    *ascending encoded* keyspace (complemented for ``largest=True``), so
+    one uint merge serves both directions.  Device footprint: one chunk
+    plus 2k candidates, independent of stream length.
+
+    Returns (values, global int32 indices), values in rank order
+    (descending for ``largest=True`` — the ``lax.top_k`` convention);
+    ties prefer earlier chunks.
+
+    >>> import numpy as np
+    >>> v, i = streaming_topk(np.asarray([1.0, 9.0, 3.0, 7.0], np.float32), 2,
+    ...                       chunk_size=2)
+    >>> (v.tolist(), i.tolist())
+    ([9.0, 7.0], [1, 3])
+    """
+    cache = plan.default_cache if cache is None else cache
+    op = "topk" if largest else "bottomk"
+    buf_u = buf_i = None  # encoded-ascending candidates + global indices
+    key_dtype = None
+    offset = 0
+    for chunk in iter_chunks(data, chunk_size):
+        n = chunk.shape[0]
+        if n == 0:
+            continue
+        dev = jax.device_put(jnp.asarray(chunk))
+        key_dtype = dev.dtype
+        vals, idx = cache.get_sorter(n, dev.dtype, op, k=min(k, n))(dev)
+        enc = _jitted(("enc", vals.shape, str(dev.dtype), largest), lambda: (
+            (lambda v: ~keyspace.encode(v)) if largest else keyspace.encode))
+        u, gi = enc(vals), idx + jnp.int32(offset)
+        if buf_u is None:
+            buf_u, buf_i = u[:k], gi[:k]
+        else:
+            mkey = ("topk-merge", buf_u.shape, u.shape, str(u.dtype), k)
+            f = _jitted(mkey, lambda: lambda a, b, ia, ib: tuple(
+                x[:k] for x in merge([a, b], values=[ia, ib])))
+            buf_u, buf_i = f(buf_u, u, buf_i, gi)
+        offset += n
+    if buf_u is None:
+        raise ValueError("streaming_topk over an empty stream")
+    dec = _jitted(("dec", buf_u.shape, str(key_dtype), largest), lambda: (
+        (lambda u: keyspace.decode(~u, key_dtype)) if largest
+        else (lambda u: keyspace.decode(u, key_dtype))))
+    return np.asarray(dec(buf_u)), np.asarray(buf_i)
+
+
+def streaming_group_by(
+    data: Source,
+    *,
+    chunk_size: int = 1 << 16,
+    cache: Optional[plan.PlanCache] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Global (distinct keys ascending, counts) over a stream: per-chunk
+    ``ops.unique`` runs merge-joined into a bounded distinct-key buffer.
+
+    Each chunk contributes its sorted (unique values, counts) run; the
+    running buffer absorbs it with one stable 2-way merge followed by a
+    host-side join of equal adjacent keys (keys are compared in the
+    encoded keyspace, so NaN forms a single class and -0.0 / +0.0 stay
+    distinct — the ``ops.unique`` semantics, stream-scaled).  The buffer
+    is bounded by the number of distinct keys, not the stream length.
+
+    >>> import numpy as np
+    >>> vals, counts = streaming_group_by(
+    ...     np.asarray([3, 1, 3, 1, 1, 3], np.int32), chunk_size=2)
+    >>> (vals.tolist(), counts.tolist())
+    ([1, 3], [3, 3])
+    """
+    from repro.ops import unique  # lazy: ops layers under stream
+
+    cache = plan.default_cache if cache is None else cache
+    buf_u = buf_c = None  # np: encoded distinct keys (asc) + int64 counts
+    key_dtype = None
+    for chunk in iter_chunks(data, chunk_size):
+        n = chunk.shape[0]
+        if n == 0:
+            continue
+        dev = jax.device_put(jnp.asarray(chunk))
+        key_dtype = dev.dtype
+        f = _jitted(("unique", dev.shape, str(dev.dtype)), lambda: (
+            lambda x: unique(x)))
+        vals, counts, num = f(dev)
+        nu = int(num)
+        cu = np.asarray(keyspace.encode(vals))[:nu]
+        cc = np.asarray(counts)[:nu].astype(np.int64)
+        if buf_u is None:
+            buf_u, buf_c = cu, cc
+            continue
+        mkey = ("gb-merge", buf_u.shape, cu.shape, str(cu.dtype))
+        g = _jitted(mkey, lambda: lambda a, b, ca, cb: merge(
+            [a, b], values=[ca, cb]))
+        mk, mc = g(jnp.asarray(buf_u), jnp.asarray(cu),
+                   jnp.asarray(buf_c), jnp.asarray(cc))
+        mk, mc = np.asarray(mk), np.asarray(mc)
+        head = np.concatenate([[True], mk[1:] != mk[:-1]])  # run starts
+        gid = np.cumsum(head) - 1
+        buf_u = mk[head]
+        buf_c = np.bincount(gid, weights=mc).astype(np.int64)
+    if buf_u is None:
+        raise ValueError("streaming_group_by over an empty stream")
+    dec = jnp.asarray(buf_u)
+    vals = np.asarray(keyspace.decode(dec, key_dtype))
+    return vals, buf_c

@@ -1,0 +1,166 @@
+"""Stable k-way merge of sorted runs (DESIGN.md §7.2).
+
+The merge is the one sort-adjacent primitive the engine's level passes
+cannot express: it *combines* already-ordered sequences instead of
+partitioning one.  Layering mirrors the sort ops:
+
+  * keys biject through ``ops.keyspace`` first, so the merge is NaN-safe
+    (NaNs last, -0.0 before +0.0) with the identical total order as
+    ``ops.sort`` — a merge of runs produced by the sort entry points is
+    therefore exactly the sort of the concatenation;
+  * two bit-identical engines behind the same ``engine="xla"|"pallas"|
+    "auto"`` seam as ``stable_partition``: "xla" is the two-searchsorted
+    rank merge (``kernels.ref.merge_path_perm_ref``), "pallas" the tiled
+    merge-path kernel (``kernels.merge_path``);
+  * k runs reduce through a **tournament of pairwise passes** — the
+    static-shape analogue of a loser tree: each round merges adjacent run
+    pairs, ceil(log2 k) rounds total, and because every pairwise pass is
+    stable and rounds preserve run order, ties keep (run index, position)
+    order end to end.
+
+Everything here is device-resident and jit-compatible (static run count
+and lengths); the host-orchestrated out-of-core pipelines live in
+``stream.api``.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ips4o import SortConfig, resolve_engine
+from repro.kernels.merge_path import merge_path_perm
+from repro.kernels.ref import merge_path_perm_ref
+from repro.ops import keyspace
+
+__all__ = ["merge", "merge_perm", "merge_runs_encoded"]
+
+
+def merge_perm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    engine: str = "xla",
+    tile: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Stable-merge permutation of two *totally ordered* sorted runs.
+
+    ``concat(a, b)[perm]`` is the stable merge (ties: all of ``a`` first).
+    Callers pass keyspace-encoded keys; raw floats with NaNs violate the
+    total-order contract exactly as they do for ``ips4o_sort``.  Both
+    engines emit the bit-identical permutation.
+    """
+    if engine == "pallas":
+        return merge_path_perm(a, b, tile=tile, interpret=interpret)
+    if engine != "xla":
+        raise ValueError(f"unknown merge engine {engine!r}; expected xla|pallas")
+    return merge_path_perm_ref(a, b)
+
+
+def _resolve_merge_engine(engine: Optional[str], n: int, dtype) -> str:
+    """Same resolution seam as ``stable_partition``: an explicit engine
+    wins; None/"auto" consults the plan cache's persisted choice for this
+    shape and then the backend heuristic (``core.ips4o.resolve_engine``)."""
+    return resolve_engine(SortConfig(engine=engine or "auto"), n, dtype)
+
+
+def _merge2(x: Any, y: Any, engine: str, tile: int, interpret: Optional[bool]) -> Any:
+    """One tournament round step: stable merge of two arrays-dicts whose
+    'k' leaves are encoded sorted runs; every other leaf rides the perm."""
+    na, nb = x["k"].shape[0], y["k"].shape[0]
+    if na == 0:
+        return y
+    if nb == 0:
+        return x
+    perm = merge_perm(x["k"], y["k"], engine=engine, tile=tile, interpret=interpret)
+    return jax.tree.map(
+        lambda u, v: jnp.take(jnp.concatenate([u, v], axis=0), perm, axis=0), x, y
+    )
+
+
+def merge_runs_encoded(
+    items: List[Any],
+    *,
+    engine: str = "xla",
+    tile: int = 256,
+    interpret: Optional[bool] = None,
+) -> Any:
+    """Tournament-reduce k arrays-dicts (encoded sorted 'k' + payload
+    leaves) to one.  Adjacent pairs merge each round, so run order — and
+    with it global tie order — is preserved; empty runs are absorbed
+    free of charge (the pairwise step short-circuits them)."""
+    if not items:
+        raise ValueError("merge of zero runs")
+    while len(items) > 1:
+        nxt = [
+            _merge2(items[i], items[i + 1], engine, tile, interpret)
+            for i in range(0, len(items) - 1, 2)
+        ]
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    return items[0]
+
+
+def merge(
+    runs: Sequence[jax.Array],
+    values: Optional[Sequence[Any]] = None,
+    *,
+    engine: Optional[str] = None,
+    tile: int = 256,
+    interpret: Optional[bool] = None,
+) -> Any:
+    """Stable k-way merge of sorted runs, NaN-safe.  Jit-compatible.
+
+    Args:
+      runs: sorted 1-D key arrays of one dtype, sorted in the keyspace
+        total order — as produced by ``ops.sort``: NaNs last, -0.0
+        strictly before +0.0.  (``jnp.sort`` output qualifies except that
+        it leaves -0.0/+0.0 merely grouped, not ordered.)  Ragged
+        lengths, empty runs, and k=1 are all fine.
+      values: optional per-run payload pytrees (leaf leading dim = run
+        length); merged alongside their keys.
+      engine: "xla" | "pallas" | "auto"/None — the ``stable_partition``
+        seam; both engines are bit-identical.
+      tile: merge-path tile for the "pallas" engine.
+
+    Returns merged keys — with ``values``, ``(keys, values)`` — equal to
+    the stable sort of the concatenation: ties keep (run, position) order,
+    so payload rows are stable whenever each run was stably formed.
+
+    >>> import jax.numpy as jnp
+    >>> merge([jnp.asarray([1.0, 3.0]), jnp.asarray([2.0, 4.0])]).tolist()
+    [1.0, 2.0, 3.0, 4.0]
+    >>> k, v = merge(
+    ...     [jnp.asarray([1, 5]), jnp.asarray([1, 9])],
+    ...     values=[jnp.asarray([10, 11]), jnp.asarray([12, 13])],
+    ... )
+    >>> (k.tolist(), v.tolist())  # tie on 1: run 0's payload first
+    ([1, 1, 5, 9], [10, 12, 11, 13])
+    """
+    runs = list(runs)
+    if not runs:
+        raise ValueError("merge of zero runs")
+    if values is not None and len(values) != len(runs):
+        raise ValueError(f"{len(runs)} runs but {len(values)} value pytrees")
+    dtype = runs[0].dtype
+    for r in runs:
+        if r.ndim != 1:
+            raise ValueError("runs must be 1-D")
+        if r.dtype != dtype:
+            raise ValueError(f"mixed run dtypes {dtype} vs {r.dtype}")
+    n = sum(r.shape[0] for r in runs)
+    engine = _resolve_merge_engine(engine, n, dtype)
+    items = []
+    for i, r in enumerate(runs):
+        d = {"k": keyspace.encode(r)}
+        if values is not None:
+            d["v"] = values[i]
+        items.append(d)
+    out = merge_runs_encoded(items, engine=engine, tile=tile, interpret=interpret)
+    keys = keyspace.decode(out["k"], dtype)
+    if values is None:
+        return keys
+    return keys, out["v"]

@@ -46,6 +46,27 @@ _SCRIPT = textwrap.dedent(
     mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
     run(mesh2, ("pod", "data"), "Uniform", 1 << 16)
 
+    # capacity overflow (d > 1): undersized slack must SET the overflow
+    # flag and truncate deterministically (counts clamped to capacity,
+    # every shard still sorted) — never UB-shaped output
+    n = 1 << 16
+    x = make_input("Uniform", n, np.float32, seed=21)
+    xs = jax.device_put(jnp.asarray(x), NamedSharding(mesh, P("data")))
+    f_over = jax.jit(lambda a: distributed_sort(a, mesh, "data",
+                                                slack=0.05, cfg=cfg))
+    out1, counts1, ovf1 = map(np.asarray, f_over(xs))
+    assert ovf1.any(), "undersized capacity must flag overflow"
+    d = counts1.shape[0]
+    cap = out1.shape[0] // d
+    assert (counts1 <= cap).all()  # truncated to capacity, not UB
+    for i in range(d):
+        shard = out1[i * cap : i * cap + counts1[i]]
+        assert np.all(shard[:-1] <= shard[1:]), "overflow shard not sorted"
+    out2, counts2, ovf2 = map(np.asarray, f_over(xs))  # deterministic
+    np.testing.assert_array_equal(out1, out2)
+    np.testing.assert_array_equal(counts1, counts2)
+    print("OK overflow d=8")
+
     # payload rows travel with their keys (the Pair/100Bytes case)
     n = 1 << 16
     x = make_input("Uniform", n, np.float32, seed=11)
@@ -68,6 +89,43 @@ _SCRIPT = textwrap.dedent(
     print("ALL-OK")
     """
 )
+
+
+def test_capacity_overflow_truncates_deterministically():
+    """ISSUE 4 satellite: the capacity-overflow path of core/distributed.py
+    (in-process via the degenerate d == 1 mesh, which shares the overflow
+    contract of the d > 1 exchange: flag set, deterministic truncation to
+    ``capacity``, output still sorted — never UB-shaped output)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.distributed import distributed_sort
+    from repro.core.ips4o import SortConfig
+    from repro.data.distributions import make_input
+
+    cfg = SortConfig(base_case=256, kmax=16, tile=128, max_sample=256)
+    mesh = jax.make_mesh((1,), ("data",))
+    n = 512
+    x = make_input("Uniform", n, np.float32, seed=13)
+    xs = jax.device_put(jnp.asarray(x), NamedSharding(mesh, P("data")))
+    f = jax.jit(lambda a: distributed_sort(a, mesh, "data", slack=0.25, cfg=cfg))
+    out, counts, ovf = map(np.asarray, f(xs))
+    cap = out.shape[0]
+    assert cap < n, "test must undersize capacity"
+    assert ovf.all(), "undersized capacity must set the overflow flag"
+    np.testing.assert_array_equal(counts, [cap])
+    # deterministic truncation: the first `capacity` elements, sorted
+    np.testing.assert_array_equal(out, np.sort(x[:cap]))
+    out2, counts2, ovf2 = map(np.asarray, f(xs))
+    np.testing.assert_array_equal(out, out2)
+
+    # ample capacity on the same path: no flag, full sorted output
+    g = jax.jit(lambda a: distributed_sort(a, mesh, "data", slack=2.0, cfg=cfg))
+    out3, counts3, ovf3 = map(np.asarray, g(xs))
+    assert not ovf3.any()
+    np.testing.assert_array_equal(out3[: counts3[0]], np.sort(x))
 
 
 @pytest.mark.slow

@@ -1,10 +1,12 @@
-"""Tier-1 wiring for the ``repro.ops`` doctest suite (ISSUE 3 satellite).
+"""Tier-1 wiring for the ``repro.ops`` / ``repro.stream`` doctest suites
+(ISSUE 3 / ISSUE 4 satellites).
 
-CI also runs ``pytest --doctest-modules src/repro/ops`` in the docs job;
-this file puts the same examples under the tier-1 umbrella (``pytest -x -q``
-from the repo root), so a docstring example that rots fails the default
-test run, not just the docs job.  Every public ``repro.ops`` module must
-carry at least one runnable example.
+CI also runs ``pytest --doctest-modules src/repro/ops src/repro/stream``
+in the docs job; this file puts the same examples under the tier-1
+umbrella (``pytest -x -q`` from the repo root), so a docstring example
+that rots fails the default test run, not just the docs job.  Every
+public ``repro.ops`` / ``repro.stream`` module must carry at least one
+runnable example.
 """
 import doctest
 import importlib
@@ -19,6 +21,9 @@ OPS_MODULES = [
     "repro.ops.groupby",
     "repro.ops.keyspace",
     "repro.ops.plan",
+    "repro.stream.api",
+    "repro.stream.merge",
+    "repro.stream.runs",
 ]
 
 

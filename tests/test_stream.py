@@ -1,0 +1,372 @@
+"""repro.stream test suite (ISSUE 4): out-of-core sort, merge-path merge,
+streaming ops, plan-cache stream keys, and the rewired callers.
+
+The merge acceptance bar: ``external_sort`` over >= 4 chunks bit-identical
+to a sort of the full concatenation for all nine paper distributions x
+{f32, i32} x both merge engines; merge stability (payload rows, duplicate
+keys straddling run boundaries, NaN / -0.0, ragged and empty runs, k=1)
+property-tested against ``jnp.sort`` / ``jnp.argsort(stable=True)`` of
+the concatenation.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import ops, stream
+from repro.data.distributions import DISTRIBUTIONS, make_input
+from repro.kernels.merge_path import merge_path_partition, merge_path_perm
+from repro.kernels.ref import merge_path_perm_ref
+from repro.ops.plan import PlanCache, StreamPlan
+
+ENGINES = ("xla", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# external_sort: the ISSUE acceptance sweep
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+@pytest.mark.parametrize("dist", sorted(DISTRIBUTIONS))
+def test_external_sort_distributions(dist, dtype, engine):
+    x = make_input(dist, 4096, dtype, seed=5)
+    got = stream.external_sort(x, chunk_size=1024, engine=engine)  # 4 chunks
+    assert got.dtype == x.dtype
+    np.testing.assert_array_equal(got, np.sort(x))
+
+
+def test_external_sort_ragged_and_generator():
+    x = make_input("TwoDup", 3000, np.int32, seed=2)  # ragged tail chunk
+    np.testing.assert_array_equal(
+        stream.external_sort(x, chunk_size=1024), np.sort(x)
+    )
+    chunks = [x[:1024], x[1024:2048], x[2048:]]  # generator-fed source
+    np.testing.assert_array_equal(
+        stream.external_sort(iter(chunks), chunk_size=1024), np.sort(x)
+    )
+
+
+def test_external_argsort_is_sorting_permutation():
+    x = make_input("RootDup", 4000, np.int32, seed=3)
+    idx = stream.external_argsort(x, chunk_size=1000)
+    assert sorted(idx.tolist()) == list(range(4000))
+    np.testing.assert_array_equal(x[idx], np.sort(x))
+    # distinct keys: bit-identical to the stable argsort
+    y = np.random.default_rng(0).permutation(4000).astype(np.int32)
+    np.testing.assert_array_equal(
+        stream.external_argsort(y, chunk_size=1000), np.argsort(y, kind="stable")
+    )
+
+
+# ---------------------------------------------------------------------------
+# merge: stability, payloads, engine parity
+# ---------------------------------------------------------------------------
+def _stable_runs(x: jnp.ndarray, bounds):
+    """Split x at bounds; per-run stable sort with global source indices —
+    the setup under which a stable merge must reproduce the global stable
+    argsort exactly.
+
+    Run order (and the oracle, see :func:`_stable_oracle`) lives in the
+    *keyspace* total order: ``jnp.sort`` in this jax version leaves
+    -0.0/+0.0 grouped but unordered, while the keyspace (and therefore
+    the merge) orders -0.0 strictly before +0.0.
+    """
+    enc = ops.keyspace.encode(x)
+    runs, idxs = [], []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        order = jnp.argsort(enc[lo:hi], stable=True)
+        runs.append(x[lo:hi][order])
+        idxs.append(order.astype(jnp.int32) + lo)
+    return runs, idxs
+
+
+def _stable_oracle(x: jnp.ndarray):
+    """(sorted keys, stable argsort) of x in the keyspace total order."""
+    enc = ops.keyspace.encode(x)
+    perm = jnp.argsort(enc, stable=True)
+    return ops.keyspace.decode(enc[perm], x.dtype), perm
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_merge_stability_duplicates_across_boundaries(engine):
+    # duplicate-heavy keys so every run boundary straddles equal keys
+    x = jnp.asarray(np.random.default_rng(7).integers(0, 5, 700).astype(np.int32))
+    runs, idxs = _stable_runs(x, [0, 200, 450, 700])
+    keys, src = stream.merge(runs, values=idxs, engine=engine, tile=64)
+    ok, operm = _stable_oracle(x)
+    np.testing.assert_array_equal(np.asarray(keys), np.asarray(ok))
+    np.testing.assert_array_equal(np.asarray(src), np.asarray(operm))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_merge_nan_negzero_payload(engine):
+    pool = np.asarray(
+        [np.nan, -0.0, 0.0, -np.inf, np.inf, 1.5, -1.5, 1.5], np.float32
+    )
+    x = jnp.asarray(np.random.default_rng(3).choice(pool, 300))
+    runs, idxs = _stable_runs(x, [0, 80, 150, 300])
+    keys, src = stream.merge(runs, values=idxs, engine=engine, tile=32)
+    oracle, operm = _stable_oracle(x)
+    np.testing.assert_array_equal(np.asarray(keys), np.asarray(oracle))
+    # assert_array_equal treats -0.0 == 0.0; pin the sign bits too
+    np.testing.assert_array_equal(
+        np.signbit(np.asarray(keys)), np.signbit(np.asarray(oracle))
+    )
+    np.testing.assert_array_equal(np.asarray(src), np.asarray(operm))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_merge_ragged_empty_and_k1(engine):
+    a = jnp.sort(jnp.asarray([3.0, 1.0, 2.0], jnp.float32))
+    empty = jnp.zeros((0,), jnp.float32)
+    out = stream.merge([empty, a, empty, jnp.asarray([1.5], jnp.float32), empty],
+                       engine=engine, tile=8)
+    np.testing.assert_array_equal(
+        np.asarray(out), [1.0, 1.5, 2.0, 3.0]
+    )
+    np.testing.assert_array_equal(np.asarray(stream.merge([a], engine=engine)),
+                                  np.asarray(a))  # k=1 passthrough
+    np.testing.assert_array_equal(  # payload rows (2-D leaves) ride along
+        np.asarray(stream.merge(
+            [a, a],
+            values=[jnp.zeros((3, 2), jnp.int32), jnp.ones((3, 2), jnp.int32)],
+        )[1]).sum(), 6)
+
+
+def test_merge_rejects_bad_input():
+    with pytest.raises(ValueError):
+        stream.merge([])
+    with pytest.raises(ValueError):
+        stream.merge([jnp.zeros((2, 2))])
+    with pytest.raises(ValueError):
+        stream.merge([jnp.zeros(2, jnp.float32), jnp.zeros(2, jnp.int32)])
+    with pytest.raises(ValueError):
+        stream.merge([jnp.zeros(2)], values=[])
+    with pytest.raises(ValueError):
+        stream.merge_perm(jnp.zeros(2), jnp.zeros(2), engine="cuda")
+
+
+# deterministic randomized sweep over the same edge surface the hypothesis
+# suite (tests/test_stream_properties.py) explores — this one always runs,
+# even where hypothesis is not installed
+_POOL = np.asarray(
+    [np.nan, -0.0, 0.0, -np.inf, np.inf, 1.0, -1.0, 2.5, 2.5, -2.5], np.float32
+)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("seed", range(6))
+def test_merge_randomized_edge_sweep(engine, seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, 6))
+    lens = [int(rng.integers(0, 26)) for _ in range(k)]
+    runs_np = [rng.choice(_POOL, ln) for ln in lens]
+    x = jnp.asarray(np.concatenate(runs_np) if sum(lens) else np.zeros(0, np.float32))
+    if x.shape[0] == 0:
+        return
+    bounds = np.cumsum([0] + lens).tolist()
+    runs, idxs = _stable_runs(x, bounds)
+    tile = int(rng.choice([8, 64]))
+    keys, src = stream.merge(runs, values=idxs, engine=engine, tile=tile)
+    oracle, operm = _stable_oracle(x)
+    np.testing.assert_array_equal(np.asarray(keys), np.asarray(oracle))
+    np.testing.assert_array_equal(
+        np.signbit(np.asarray(keys)), np.signbit(np.asarray(oracle))
+    )
+    np.testing.assert_array_equal(np.asarray(src), np.asarray(operm))
+
+
+# ---------------------------------------------------------------------------
+# the merge-path kernel itself
+# ---------------------------------------------------------------------------
+def test_merge_path_kernel_vs_ref():
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        na, nb = int(rng.integers(1, 400)), int(rng.integers(1, 400))
+        a = jnp.asarray(np.sort(rng.integers(0, 30, na).astype(np.uint32)))
+        b = jnp.asarray(np.sort(rng.integers(0, 30, nb).astype(np.uint32)))
+        for tile in (16, 128):
+            np.testing.assert_array_equal(
+                np.asarray(merge_path_perm(a, b, tile=tile, interpret=True)),
+                np.asarray(merge_path_perm_ref(a, b)),
+            )
+
+
+def test_merge_path_partition_properties():
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(np.sort(rng.integers(0, 10, 130).astype(np.uint32)))
+    b = jnp.asarray(np.sort(rng.integers(0, 10, 70).astype(np.uint32)))
+    d = jnp.arange(0, 201, 16, dtype=jnp.int32)
+    part = np.asarray(merge_path_partition(a, b, d))
+    # i(d) counts A-elements among the first d outputs of the stable merge
+    perm = np.asarray(merge_path_perm_ref(a, b))
+    oracle = [int(np.sum(perm[:dd] < 130)) for dd in np.asarray(d)]
+    np.testing.assert_array_equal(part, oracle)
+
+
+# ---------------------------------------------------------------------------
+# streaming ops
+# ---------------------------------------------------------------------------
+def test_streaming_topk_both_directions():
+    x = make_input("Exponential", 5000, np.float32, seed=9)
+    v, i = stream.streaming_topk(x, 7, chunk_size=1500)
+    np.testing.assert_array_equal(v, np.sort(x)[::-1][:7])
+    np.testing.assert_array_equal(x[i], v)
+    v2, i2 = stream.streaming_topk(x, 7, chunk_size=1500, largest=False)
+    np.testing.assert_array_equal(v2, np.sort(x)[:7])
+    np.testing.assert_array_equal(x[i2], v2)
+
+
+def test_streaming_topk_k_exceeds_stream():
+    x = np.asarray([3.0, 1.0, 2.0], np.float32)
+    v, i = stream.streaming_topk(x, 10, chunk_size=2)
+    np.testing.assert_array_equal(v, [3.0, 2.0, 1.0])
+    np.testing.assert_array_equal(x[i], v)
+
+
+def test_streaming_group_by_matches_unique():
+    x = make_input("EightDup", 6000, np.int32, seed=6)
+    vals, counts = stream.streaming_group_by(x, chunk_size=1000)
+    uv, uc = np.unique(x, return_counts=True)
+    np.testing.assert_array_equal(vals, uv)
+    np.testing.assert_array_equal(counts, uc)
+    assert counts.sum() == 6000
+
+
+def test_streaming_group_by_nan_classes():
+    x = np.asarray([1.0, np.nan, 1.0, np.nan, -0.0, 0.0], np.float32)
+    vals, counts = stream.streaming_group_by(x, chunk_size=2)
+    # keyspace classes: -0.0 < 0.0 < 1.0 < NaN (one class)
+    assert np.isnan(vals[-1]) and counts[-1] == 2
+    np.testing.assert_array_equal(counts, [1, 1, 2, 2])
+    np.testing.assert_array_equal(np.signbit(vals[:2]), [True, False])
+
+
+# ---------------------------------------------------------------------------
+# plan cache: the stream: key family
+# ---------------------------------------------------------------------------
+def test_stream_plan_tune_roundtrip(tmp_path):
+    pc = PlanCache(path=str(tmp_path / "plans.json"))
+    plan = pc.stream_plan(512, 4, jnp.int32, tune=True)
+    assert isinstance(plan, StreamPlan)
+    assert plan.engine in ENGINES and plan.merge_tile in (128, 256, 512)
+    # persisted under the stream: family, reloadable by a fresh cache
+    pc2 = PlanCache(path=pc.path)
+    assert pc2.stream_plan(512, 4, jnp.int32) == plan
+    key = PlanCache._stream_key(512, 4, jnp.int32)
+    assert key.startswith("stream:chunk=512:fanin=4")
+    assert key in pc2._plans and "us" in pc2._plans[key]
+    # explicit engine overrides the planned engine, keeps the tile
+    forced = pc2.stream_plan(512, 4, jnp.int32, engine="pallas")
+    assert forced.engine == "pallas" and forced.merge_tile == plan.merge_tile
+    # untuned key: backend heuristic (xla in this CPU container)
+    assert pc2.stream_plan(512, 8, jnp.int32).engine == "xla"
+
+
+def test_stream_plan_tolerates_foreign_entry(tmp_path):
+    import json
+
+    path = tmp_path / "plans.json"
+    key = PlanCache._stream_key(256, 2, jnp.float32)
+    path.write_text(json.dumps({key: {"config": {"merge_tile": "big"}}}))
+    plan = PlanCache(path=str(path)).stream_plan(256, 2, jnp.float32)
+    assert plan == StreamPlan(256, 2)  # defaults, never a crash
+
+
+# ---------------------------------------------------------------------------
+# rewired callers
+# ---------------------------------------------------------------------------
+def test_pack_by_length_out_of_core_matches_in_core():
+    from repro.data.pipeline import pack_by_length
+
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(1, 512, 4000).astype(np.int32)
+    row_id, offset, num_rows = pack_by_length(lengths, 512, chunk_size=1000)
+    row_id0, offset0, num_rows0 = pack_by_length(lengths, 512)
+    # both paths pack the same sorted length sequence -> same row structure
+    assert num_rows == num_rows0
+    fill = np.zeros(num_rows, np.int64)
+    for d in range(4000):
+        assert 0 <= offset[d] and offset[d] + min(lengths[d], 512) <= 512
+        fill[row_id[d]] += min(lengths[d], 512)
+    assert (fill <= 512).all() and fill.sum() == np.minimum(lengths, 512).sum()
+
+
+def test_scheduler_merged_backlog_admission():
+    from repro.serve.scheduler import Request, Scheduler, admit_many
+
+    s = Scheduler(batch_size=4)
+    for uid, rem in [(10, 5), (11, 2), (12, 9), (13, 2)]:
+        s.submit(Request(uid, 1, rem))
+    s.attach_backlog([Request(0, 1, 7), Request(1, 1, 2), Request(2, 1, 4)])
+    got = [(r.uid, r.remaining) for r in s.next_batch()]
+    # shortest-remaining-first across BOTH sources; backlog wins ties (older)
+    assert got == [(1, 2), (11, 2), (13, 2), (2, 4)]
+    assert [r.uid for r in s.backlog] == [0]
+    assert [r.uid for r in s.queue] == [10, 12]
+    got2 = [(r.uid, r.remaining) for r in s.next_batch()]
+    assert got2 == [(10, 5), (0, 7), (12, 9)]
+    assert not s.backlog and not s.queue
+    assert s.next_batch() == []
+
+    # attach_backlog sorts an unsorted spill deterministically (FIFO ties)
+    s2 = Scheduler(batch_size=2)
+    s2.attach_backlog([Request(7, 1, 9), Request(8, 1, 3), Request(9, 1, 9)])
+    assert [r.uid for r in s2.backlog] == [8, 7, 9]
+    assert [r.uid for r in s2.next_batch()] == [8, 7]
+
+    # admit_many routes backlog-carrying schedulers through the merged view
+    s3 = Scheduler(batch_size=2)
+    [s3.submit(Request(u, 1, r)) for u, r in [(1, 3), (2, 1)]]
+    s4 = Scheduler(batch_size=2)
+    s4.submit(Request(3, 1, 5))
+    s4.attach_backlog([Request(4, 1, 5)])
+    res = admit_many([s3, s4])
+    assert [r.uid for r in res[0]] == [2, 1]
+    assert [r.uid for r in res[1]] == [4, 3]  # backlog wins the tie on 5
+
+
+def test_scheduler_backlog_repeated_attach_stays_sorted():
+    from repro.serve.scheduler import Request, Scheduler
+
+    s = Scheduler(batch_size=3)
+    s.attach_backlog([Request(0, 1, 9)])
+    s.attach_backlog([Request(1, 1, 1), Request(2, 1, 9)])  # second attach
+    assert [r.remaining for r in s.backlog] == [1, 9, 9]
+    assert [r.uid for r in s.backlog] == [1, 0, 2]  # earlier attach wins ties
+    s.submit(Request(3, 1, 5))
+    assert [r.uid for r in s.next_batch()] == [1, 3, 0]
+
+
+def test_scheduler_backlog_int32_overflow_falls_back():
+    from repro.serve.scheduler import Request, Scheduler
+
+    s = Scheduler(batch_size=2)
+    s.submit(Request(10, 1, 2**31 + 5))  # remaining overflows int32
+    s.submit(Request(11, 1, 3))
+    s.attach_backlog([Request(0, 1, 4)])
+    assert [r.uid for r in s.next_batch()] == [11, 0]
+    assert [r.uid for r in s.next_batch()] == [10]
+
+
+# ---------------------------------------------------------------------------
+# run formation
+# ---------------------------------------------------------------------------
+def test_form_runs_order_and_shapes():
+    x = make_input("Uniform", 2500, np.float32, seed=8)
+    runs = stream.form_runs(x, 1000)
+    assert [r.shape[0] for r in runs] == [1000, 1000, 500]
+    for lo, run in zip([0, 1000, 2000], runs):
+        np.testing.assert_array_equal(np.asarray(run), np.sort(x[lo : lo + 1000]))
+    pairs = stream.form_argsort_runs(x, 1000)
+    for (keys, idx), lo in zip(pairs, [0, 1000, 2000]):
+        np.testing.assert_array_equal(np.asarray(keys), x[np.asarray(idx)])
+        assert int(idx.min()) >= lo
+
+
+def test_iter_chunks_validation():
+    with pytest.raises(ValueError):
+        list(stream.iter_chunks(np.zeros(4), 0))
+    with pytest.raises(ValueError):
+        list(stream.iter_chunks(np.zeros((2, 2)), 1))
+    with pytest.raises(ValueError):
+        list(stream.iter_chunks(iter([np.zeros((2, 2))]), 1))

@@ -1,0 +1,87 @@
+"""Property-based tests (hypothesis) for merge stability (ISSUE 4).
+
+Duplicate keys straddling run boundaries, NaN / -0.0 keys, payload rows,
+ragged run lengths (empty runs, k=1) — asserting bit-identical output to
+``jnp.sort`` / ``jnp.argsort(stable=True)`` of the concatenation across
+both merge engines.  A deterministic sweep over the same edge surface
+lives in ``tests/test_stream.py`` for environments without hypothesis.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro import stream
+from repro.ops import keyspace
+
+_POOL = [np.nan, -0.0, 0.0, -np.inf, np.inf, 1.0, -1.0, 2.5, 2.5, -2.5]
+
+
+def _stable_runs(x, bounds):
+    # run order and oracle live in the *keyspace* total order (-0.0 strictly
+    # before +0.0, which this jax's jnp.sort leaves merely grouped)
+    enc = keyspace.encode(x)
+    runs, idxs = [], []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        order = jnp.argsort(enc[lo:hi], stable=True)
+        runs.append(x[lo:hi][order])
+        idxs.append(order.astype(jnp.int32) + lo)
+    return runs, idxs
+
+
+def _stable_oracle(x):
+    enc = keyspace.encode(x)
+    perm = jnp.argsort(enc, stable=True)
+    return keyspace.decode(enc[perm], x.dtype), perm
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(
+        st.lists(
+            st.one_of(st.sampled_from(_POOL), st.integers(-3, 3).map(float)),
+            min_size=0,
+            max_size=25,
+        ),
+        min_size=1,
+        max_size=5,
+    ),
+    st.sampled_from(("xla", "pallas")),
+    st.sampled_from((8, 64)),
+)
+def test_merge_is_stable_sort_of_concat(run_lists, engine, tile):
+    runs_np = [np.asarray(r, np.float32) for r in run_lists]
+    lens = [len(r) for r in runs_np]
+    if sum(lens) == 0:
+        return
+    x = jnp.asarray(np.concatenate(runs_np))
+    runs, idxs = _stable_runs(x, np.cumsum([0] + lens).tolist())
+    keys, src = stream.merge(runs, values=idxs, engine=engine, tile=tile)
+    oracle, operm = _stable_oracle(x)
+    np.testing.assert_array_equal(np.asarray(keys), np.asarray(oracle))
+    np.testing.assert_array_equal(  # -0.0 vs 0.0 must order, not just compare
+        np.signbit(np.asarray(keys)), np.signbit(np.asarray(oracle))
+    )
+    np.testing.assert_array_equal(np.asarray(src), np.asarray(operm))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(1, 120),
+    st.integers(1, 120),
+    st.integers(0, 8),
+    st.sampled_from((16, 128)),
+)
+def test_merge_path_kernel_matches_ref(na, nb, span, tile):
+    rng = np.random.default_rng(na * 1000 + nb)
+    a = jnp.asarray(np.sort(rng.integers(0, span + 1, na).astype(np.uint32)))
+    b = jnp.asarray(np.sort(rng.integers(0, span + 1, nb).astype(np.uint32)))
+    from repro.kernels.merge_path import merge_path_perm
+    from repro.kernels.ref import merge_path_perm_ref
+
+    np.testing.assert_array_equal(
+        np.asarray(merge_path_perm(a, b, tile=tile, interpret=True)),
+        np.asarray(merge_path_perm_ref(a, b)),
+    )
