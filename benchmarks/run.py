@@ -9,6 +9,7 @@
   sort_ops           DESIGN.md §5     repro.ops: topk vs full sort, group_by
   sort_batched       DESIGN.md §6     batched (B, n) sort vs loop-over-rows
   sort_external      DESIGN.md §7     external_sort vs single-shot + merge
+  sort_distributed   DESIGN.md §8     multi-level mesh sort, volume per level
 
 ``python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`` prints one
 CSV block per table plus a Table-1-style summary, and writes every row to
@@ -32,6 +33,7 @@ MODULES = [
     "sort_ops",
     "sort_batched",
     "sort_external",
+    "sort_distributed",
 ]
 
 

@@ -1,0 +1,114 @@
+"""DESIGN.md §8: multi-level distributed sort on a simulated host mesh.
+
+For d in {2, 4, 8} virtual CPU devices (subprocess each, like
+``sort_scaling``), runs the ``repro.dist`` engine on a single-axis mesh
+(one exchange level) and — where d factors — a two-axis mesh (2, d/2)
+(two levels), reporting wall clock and the **collective volume per
+level**: bytes entering each level's ``all_to_all`` per device, the
+quantity the multi-level schedule is designed to keep per-axis-sized
+(splitter sets of ``groups - 1``, fan-in ``groups`` instead of d).
+
+NOTE: virtual devices share one physical core, so wall clock validates
+overhead only; the volume-per-level accounting (static, from the level
+schedule) is the scaling evidence, matching the Fugaku observation that
+per-axis collective fan-in is what survives at scale.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import Row
+
+N = 1 << 18
+DEVICE_COUNTS = [2, 4, 8]
+
+_CHILD = r"""
+import os, sys, json
+d = int(sys.argv[1]); n = int(sys.argv[2]); axes_kind = sys.argv[3]
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+import jax, time
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import dist
+from repro.dist.levels import plan_schedule
+
+if axes_kind == "two" and d >= 4:
+    mesh = jax.make_mesh((2, d // 2), ("pod", "data"))
+    axes = ("pod", "data")
+else:
+    mesh = jax.make_mesh((d,), ("data",))
+    axes = "data"
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.random(n, dtype=np.float32))
+x = jax.device_put(x, NamedSharding(mesh, P(axes if isinstance(axes, str) else tuple(axes))))
+f = jax.jit(lambda a: dist.sort(a, mesh, axes))
+out, counts, overflow = jax.block_until_ready(f(x))
+assert not bool(np.any(np.asarray(overflow))), "capacity overflow"
+counts = np.asarray(counts)
+vals = np.asarray(out)
+cap = vals.shape[0] // counts.shape[0]
+glob = np.concatenate([vals[i*cap:i*cap+counts[i]] for i in range(counts.shape[0])])
+np.testing.assert_array_equal(np.sort(np.asarray(x)), glob)
+ts = []
+for _ in range(3):
+    t0 = time.perf_counter(); jax.block_until_ready(f(x))
+    ts.append(time.perf_counter() - t0)
+
+# static collective-volume accounting from the level schedule: each level
+# moves groups * capacity key slots (+ the count vector) per device
+sched = plan_schedule(dict(mesh.shape), axes, n // d, slack=2.0)
+itemsize = 4
+vol_per_level = [lvl.groups * lvl.capacity * itemsize for lvl in sched]
+print(json.dumps({
+    "d": d, "t": float(np.median(ts)), "levels": len(sched),
+    "splitters_per_level": [lvl.groups - 1 for lvl in sched],
+    "vol_per_level": vol_per_level,
+    "exchange_bytes_per_dev": int(sum(vol_per_level)),
+}))
+"""
+
+
+def run(quick: bool = False):
+    n = (1 << 16) if quick else N
+    counts = DEVICE_COUNTS[:2] if quick else DEVICE_COUNTS
+    rows: list[Row] = []
+    env = {**os.environ, "PYTHONPATH": os.pathsep.join(sys.path)}
+    for d in counts:
+        kinds = ["one"] + (["two"] if d >= 4 else [])
+        for kind in kinds:
+            r = subprocess.run(
+                [sys.executable, "-c", _CHILD, str(d), str(n), kind],
+                capture_output=True, text=True, env=env, timeout=1200,
+            )
+            if r.returncode != 0:
+                raise RuntimeError(
+                    f"dist child d={d} {kind} failed:\n{r.stderr[-2000:]}"
+                )
+            res = json.loads(r.stdout.strip().splitlines()[-1])
+            rows.append({
+                "bench": "dist_multilevel",
+                "devices": d,
+                "mesh": "1-axis" if kind == "one" else "2-axis",
+                "n": n,
+                "levels": res["levels"],
+                "splitters_per_level": "/".join(
+                    str(s) for s in res["splitters_per_level"]
+                ),
+                "s_per_call": round(res["t"], 5),
+                "exchange_bytes_per_dev": res["exchange_bytes_per_dev"],
+                "vol_per_level_bytes": "/".join(
+                    str(v) for v in res["vol_per_level"]
+                ),
+            })
+    return rows
+
+
+HEADER = [
+    "bench", "devices", "mesh", "n", "levels", "splitters_per_level",
+    "s_per_call", "exchange_bytes_per_dev", "vol_per_level_bytes",
+]

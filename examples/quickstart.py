@@ -2,13 +2,12 @@
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ips4o import SortConfig, ips4o_sort, make_sorter
+from repro.core.ips4o import ips4o_sort, make_sorter
 
 # 1. Sort keys -------------------------------------------------------------
 x = jnp.asarray(np.random.default_rng(0).random(1 << 17, dtype=np.float32))

@@ -1,8 +1,8 @@
 """Model configuration schema for all assigned architectures."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Optional
 
 __all__ = ["MoEConfig", "SSMConfig", "ModelConfig", "reduced"]
 

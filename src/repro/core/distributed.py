@@ -1,150 +1,34 @@
-"""Multi-chip distributed sort: IPS4o as the data-distribution engine.
+"""Multi-chip distributed sort — compatibility shim over ``repro.dist``.
 
 The paper's conclusion: "The algorithm can also be used for data
 distribution and local sorting in distributed memory parallel algorithms
-[2] (AMS-sort)".  This module is that instantiation on a TPU mesh:
+[2] (AMS-sort)".  The full instantiation now lives in ``repro.dist``
+(DESIGN.md §8): a multi-level, recursion-free AMS-style sort that runs
+sample → branchless-classify → stable-block-partition → all_to_all per
+mesh axis, with an observed-histogram re-split retry instead of
+truncate-on-overflow and a ``dist:`` plan family learning capacity factor
+× oversampling × engine per (n_local, d, dtype).
 
-  1. every core samples its stripe; samples are all-gathered and a shared
-     splitter set (one splitter per core boundary, oversampled) is chosen —
-     the distributed analogue of the sampling phase;
-  2. each core runs *local classification* (branchless, same classifier) to
-     one bucket per destination core, then the *stable block partition* so
-     its stripe is destination-contiguous — exactly the paper's local
-     classification phase with cores as buckets;
-  3. one capacity-padded ``all_to_all`` moves whole contiguous chunks — the
-     paper's block permutation phase, with ICI links instead of shared
-     memory (pointer atomics -> a single collective; see DESIGN.md §2);
-  4. every core sorts what it received with local IS4o (sequential IPS4o).
-
-Result: globally sorted in core order, each shard padded to capacity with
-sentinels and a valid-count per shard (the static-shape price of SPMD; the
-overflow flag reports capacity violations instead of UB).
-
-Works on any 1-D logical axis (or tuple of axes, e.g. ("pod", "data")).
+This module keeps the original single-entry-point surface alive for
+existing callers (quickstart §5, ``benchmarks/sort_scaling.py``, the
+subprocess test suite): same signature, same
+(sorted, [values,] counts, overflow) contract, same capacity-padded
+per-shard layout.  ``slack`` maps onto the capacity factor; a tuple
+``axis`` now genuinely runs one exchange level per axis instead of one
+global exchange.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Sequence, Tuple, Union
+from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
-from repro.core import sampling
-from repro.core.ips4o import SortConfig, ips4o_sort, resolve_engine
-from repro.core.partition import stable_partition
+from repro.core.ips4o import SortConfig
+from repro.dist.levels import AxisNames
 
 __all__ = ["distributed_sort", "make_distributed_sorter"]
-
-AxisNames = Union[str, Tuple[str, ...]]
-
-
-def _local_shard_sort(
-    keys: jax.Array,
-    values: Optional[jax.Array],   # (n_local, w) payload rows or None
-    d: int,
-    axis: AxisNames,
-    capacity: int,
-    oversample: int,
-    cfg: SortConfig,
-):
-    """Body run per shard under shard_map."""
-    n_local = keys.shape[0]
-    sent = sampling.sentinel_for(keys.dtype)
-
-    if d == 1:
-        # Degenerate mesh: the whole exchange is the identity (and an
-        # all_to_all over a size-1 axis trips this jax version).  Pad (or,
-        # for undersized capacity, truncate + flag overflow, matching the
-        # d > 1 contract) and sort locally.
-        m_valid = min(n_local, capacity)
-        pad = jnp.full((capacity - m_valid,), sent, keys.dtype)
-        flat = jnp.concatenate([keys[:m_valid], pad])
-        m = jnp.asarray(m_valid, jnp.int32)
-        overflow = jnp.asarray(n_local > capacity)
-        if values is None:
-            return ips4o_sort(flat, cfg=cfg), m[None], overflow[None]
-        vpad = jnp.zeros((capacity - m_valid, values.shape[1]), values.dtype)
-        sorted_local, sorted_v = ips4o_sort(
-            flat, jnp.concatenate([values[:m_valid], vpad], axis=0), cfg=cfg
-        )
-        return sorted_local, sorted_v, m[None], overflow[None]
-
-    # --- 0. balanced pre-exchange ------------------------------------------
-    # A skew-placed input (e.g. already sorted) makes the value-based
-    # exchange diagonal-heavy: one (sender, dest) pair can carry a whole
-    # stripe, so per-pair capacity would need to be n_local.  One round-robin
-    # all_to_all first gives every core a representative slice of every
-    # stripe, bounding per-pair counts at ~n_local/d w.h.p. for ANY placement
-    # (the distributed cousin of the paper's beta overpartitioning).
-    chunk = n_local // d
-    keys = jax.lax.all_to_all(
-        keys.reshape(d, chunk), axis, split_axis=0, concat_axis=0, tiled=True
-    ).reshape(n_local)
-    if values is not None:
-        w = values.shape[1]
-        values = jax.lax.all_to_all(
-            values.reshape(d, chunk, w), axis, split_axis=0, concat_axis=0,
-            tiled=True,
-        ).reshape(n_local, w)
-
-    # --- 1. sampling: local sample, global gather, shared splitters -------
-    my = jax.lax.axis_index(axis)
-    rng = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), my)
-    pos = jax.random.randint(rng, (oversample,), 0, n_local)
-    local_sample = jnp.take(keys, pos, axis=0)
-    all_samples = jax.lax.all_gather(local_sample, axis, tiled=True)  # (d*s,)
-    ssorted = jnp.sort(all_samples)
-    spl = sampling.select_splitters(ssorted, d)  # d-1 splitters
-
-    # --- 2. local classification + stable partition -----------------------
-    # Equality buckets, distributed form (paper §4.4): an element equal to a
-    # (possibly duplicated) splitter may legally live on ANY core in the
-    # span [lo, hi] covering that splitter run — stripe such elements across
-    # the span so heavy duplicates are "not a load balancing problem".
-    lo = jnp.searchsorted(spl, keys, side="left").astype(jnp.int32)
-    hi = jnp.searchsorted(spl, keys, side="right").astype(jnp.int32)
-    span = hi - lo + 1
-    stripe = jnp.arange(n_local, dtype=jnp.int32) % jnp.maximum(span, 1)
-    dest = jnp.minimum(lo + stripe, d - 1).astype(jnp.int32)  # [0, d)
-    tile = min(cfg.tile, n_local)
-    to_part = {"k": keys}
-    if values is not None:
-        to_part["v"] = values
-    # cfg.engine rides into the stripe partition too: with d buckets the
-    # counting-rank kernel is far under its VMEM one-hot cap
-    arrays, offsets = stable_partition(
-        dest, to_part, d, tile, engine=resolve_engine(cfg, n_local, keys.dtype)
-    )
-    part = arrays["k"]
-    counts = jnp.diff(offsets)  # (d,)
-
-    # --- 3. capacity-padded all_to_all (the block permutation) ------------
-    overflow = jnp.any(counts > capacity)
-    idx = offsets[:-1, None] + jnp.arange(capacity, dtype=jnp.int32)[None, :]
-    valid = jnp.arange(capacity, dtype=jnp.int32)[None, :] < counts[:, None]
-    gidx = jnp.minimum(idx, n_local - 1)
-    send = jnp.where(valid, jnp.take(part, gidx, axis=0), sent)  # (d, capacity)
-    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0, tiled=True)
-    recv_counts = jax.lax.all_to_all(
-        jnp.minimum(counts, capacity), axis, split_axis=0, concat_axis=0, tiled=True
-    )
-
-    # --- 4. local sort (IS4o); sentinels sort to the tail ------------------
-    flat = recv.reshape(d * capacity)
-    m = jnp.sum(recv_counts).astype(jnp.int32)
-    if values is None:
-        sorted_local = ips4o_sort(flat, cfg=cfg)
-        return sorted_local, m[None], overflow[None]
-
-    send_v = jnp.where(valid[..., None],
-                       jnp.take(arrays["v"], gidx, axis=0), 0)  # (d, cap, w)
-    recv_v = jax.lax.all_to_all(send_v, axis, split_axis=0, concat_axis=0,
-                                tiled=True).reshape(d * capacity, w)
-    sorted_local, sorted_v = ips4o_sort(flat, recv_v, cfg=cfg)
-    return sorted_local, sorted_v, m[None], overflow[None]
 
 
 def distributed_sort(
@@ -152,70 +36,22 @@ def distributed_sort(
     mesh: Mesh,
     axis: AxisNames = "data",
     *,
-    values: Optional[jax.Array] = None,
+    values: Optional[Any] = None,
     slack: float = 2.0,
     cfg: SortConfig = SortConfig(),
 ):
     """Sort a globally-sharded key array (optionally with payload rows).
 
-    Args:
-      keys: (n,) array sharded over ``axis`` of ``mesh`` (n divisible by the
-        axis size).
-      values: optional (n, w) payload rows, same sharding — the paper's
-        Pair/Quartet/100Bytes case; rows travel with their keys through the
-        pre-exchange, partition, and block-permutation all_to_alls.
-      slack: capacity factor for the all_to_all buffers (paper's beta-like
-        overpartitioning safety).
-
-    Returns (sorted, counts, overflow) — or, with values,
-    (sorted, sorted_values, counts, overflow):
-      sorted: (d * capacity_total,) — shard i holds its sorted range with
-        sentinel padding at the tail;
-      counts: (d,) valid element count per shard;
-      overflow: (d,) bool, True if any send bucket exceeded capacity (result
-        then dropped elements — caller should re-run with higher slack).
+    Thin wrapper over :func:`repro.dist.sort` — see that docstring for the
+    full contract.  Returns (sorted, counts, overflow) — or, with values,
+    (sorted, sorted_values, counts, overflow): shard i holds its sorted
+    range with sentinel padding at the tail; ``overflow`` is raised only
+    after the per-level re-split retries are exhausted (the result is then
+    deterministically truncated, never UB-shaped).
     """
-    axes = (axis,) if isinstance(axis, str) else tuple(axis)
-    d = 1
-    for a in axes:
-        d *= mesh.shape[a]
-    n = keys.shape[0]
-    n_local = n // d
-    if n_local * d != n:
-        raise ValueError(f"n={n} not divisible by axis size {d}")
-    if n_local % d:
-        raise ValueError(
-            f"shard size {n_local} must be divisible by d={d} (pre-exchange)"
-        )
-    capacity = int(n_local // d * slack)
-    capacity = max(128, -(-capacity // 128) * 128)
-    oversample = max(32, sampling.oversampling_factor(n) * 16)
+    from repro import dist
 
-    spec = P(axes if len(axes) > 1 else axes[0])
-    body = functools.partial(
-        _local_shard_sort,
-        d=d,
-        axis=axes if len(axes) > 1 else axes[0],
-        capacity=capacity,
-        oversample=oversample,
-        cfg=cfg,
-    )
-    if values is None:
-        f = shard_map(
-            lambda k: body(k, None),
-            mesh=mesh,
-            in_specs=(spec,),
-            out_specs=(spec, spec, spec),
-        )
-        return f(keys)
-    vspec = P(axes if len(axes) > 1 else axes[0], None)
-    f = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(spec, vspec),
-        out_specs=(spec, vspec, spec, spec),
-    )
-    return f(keys, values)
+    return dist.sort(keys, mesh, axis, values=values, slack=slack, cfg=cfg)
 
 
 def make_distributed_sorter(mesh: Mesh, axis: AxisNames = "data", **kw):

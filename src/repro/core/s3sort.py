@@ -16,8 +16,7 @@ hardware counters.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -24,6 +24,7 @@ __all__ = [
     "sentinel_for",
     "oversampling_factor",
     "select_splitters",
+    "splitters_from_histogram",
     "sample_indices",
 ]
 
@@ -89,3 +90,25 @@ def select_splitters(sorted_sample: jax.Array, k: int) -> jax.Array:
     m = sorted_sample.shape[-1]
     idx = np.clip(((np.arange(1, k) * m) // k), 0, m - 1)
     return jnp.take(sorted_sample, jnp.asarray(idx), axis=-1)
+
+
+def splitters_from_histogram(
+    candidates: jax.Array, cum_counts: jax.Array, k: int, total: jax.Array
+) -> jax.Array:
+    """Re-split rule (DESIGN.md §8): k-1 splitters from observed key ranks.
+
+    ``candidates`` is a sorted (m,) set of candidate splitter values and
+    ``cum_counts[j]`` the *observed* number of keys strictly below
+    ``candidates[j]`` (a global histogram, not a sample estimate).  The
+    returned splitters are the candidates whose observed ranks best match
+    the equidistant target ranks ``i * total / k`` — exact load balance up
+    to the mass between adjacent candidates, which is what a failed
+    sample-based split retries with.  ``total`` may be a traced scalar;
+    the target arithmetic avoids the ``total * (k-1)`` int32 overflow.
+    """
+    i = jnp.arange(1, k, dtype=jnp.int32)
+    total = total.astype(jnp.int32)
+    target = (total // k) * i + ((total % k) * i) // k
+    j = jnp.searchsorted(cum_counts, target, side="left")
+    j = jnp.clip(j, 0, candidates.shape[0] - 1)
+    return jnp.take(candidates, j)

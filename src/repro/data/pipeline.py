@@ -77,7 +77,52 @@ def _greedy_pack(lengths_np: np.ndarray, idx: np.ndarray, seq_len: int):
     return row_id, offset, len(rows)
 
 
-def pack_by_length(lengths: np.ndarray, seq_len: int, *, chunk_size: Optional[int] = None):
+def _dist_length_order(lengths_np: np.ndarray, mesh, axes) -> Optional[np.ndarray]:
+    """Global length-sorted document order via ``repro.dist.argsort``.
+
+    Lengths pad with the int32 sentinel to a shape divisible by d² (the
+    multi-level pre-exchange requirement); pads sort last and drop out of
+    the returned order.  Returns None on a degenerate (d == 1) mesh or in
+    the last-resort overflow case — callers then use the single-device
+    plan-cached path, which is semantically identical.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import dist
+    from repro.dist.levels import normalize_axes
+
+    names = normalize_axes(axes)
+    d = 1
+    for a in names:
+        d *= mesh.shape[a]
+    if d <= 1:
+        return None
+    n = len(lengths_np)
+    unit = d * d
+    n_pad = max(unit, -(-n // unit) * unit)
+    padded = np.full(n_pad, np.iinfo(np.int32).max, np.int32)
+    padded[:n] = lengths_np
+    spec = P(names if len(names) > 1 else names[0])
+    xs = jax.device_put(jnp.asarray(padded), NamedSharding(mesh, spec))
+    order, counts, overflow = dist.argsort(xs, mesh, axes)
+    if bool(np.asarray(overflow).any()):
+        return None  # last resort: retries exhausted — single-device path
+    order, counts = np.asarray(order), np.asarray(counts)
+    cap = order.shape[0] // d
+    idx = np.concatenate([order[i * cap : i * cap + counts[i]] for i in range(d)])
+    return idx[idx < n]  # sentinel pads sort last; drop them
+
+
+def pack_by_length(
+    lengths: np.ndarray,
+    seq_len: int,
+    *,
+    chunk_size: Optional[int] = None,
+    mesh=None,
+    axes="data",
+):
     """Greedy packing of documents into rows after an IPS4o length sort.
 
     Returns (row_id, offset, num_rows) per document.  Sorting by length
@@ -97,12 +142,23 @@ def pack_by_length(lengths: np.ndarray, seq_len: int, *, chunk_size: Optional[in
     pack itself stays host-side and identical.  The packing is unchanged
     up to tie order within a chunk (both paths sort by length; greedy
     packing consumes lengths, not indices, so row counts agree).
+
+    **Sharded** (DESIGN.md §8): with ``mesh`` (a ``jax.sharding.Mesh``)
+    the 1-D length argsort runs through the multi-level distributed
+    engine (``repro.dist.argsort`` over ``axes``) — lengths shard across
+    the mesh, only a per-shard slice sits on any one device, and the
+    globally sorted order comes back as concatenated valid prefixes; the
+    greedy pack itself stays host-side and identical.
     """
     import jax.numpy as jnp
 
     from repro.ops import get_sorter
 
     lengths_np = np.asarray(lengths, np.int32)
+    if mesh is not None and lengths_np.ndim == 1:
+        idx = _dist_length_order(lengths_np, mesh, axes)
+        if idx is not None:
+            return _greedy_pack(lengths_np, idx, seq_len)
     if lengths_np.ndim == 2:
         s, n = lengths_np.shape
         idx = np.asarray(

@@ -1,0 +1,20 @@
+"""repro.dist — the multi-level distributed sort subsystem (DESIGN.md §8).
+
+The paper's conclusion positions IPS4o as "the data distribution and local
+sorting" engine for distributed-memory sorting (AMS-sort); this package is
+that instantiation on a device mesh, one exchange level per mesh axis:
+
+  levels.py    the explicit (recursion-free) level schedule and capacities
+  exchange.py  per-level sample -> classify -> stable partition ->
+               all_to_all, with the observed-histogram re-split retry
+  api.py       sharded ops: sort / argsort / topk / bottomk / group_by
+               behind the same engine seam and keyspace encoding as
+               ``repro.ops``
+
+``core/distributed.py`` remains as a thin compatibility shim over
+:func:`repro.dist.sort`.
+"""
+from repro.dist.api import argsort, bottomk, group_by, sort, topk
+from repro.dist.levels import Level, plan_schedule
+
+__all__ = ["sort", "argsort", "topk", "bottomk", "group_by", "Level", "plan_schedule"]

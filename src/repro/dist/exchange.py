@@ -1,0 +1,227 @@
+"""Per-level exchange: sample → classify → stable partition → all_to_all.
+
+This is the body of one :class:`repro.dist.levels.Level`, run per shard
+under ``shard_map``.  It is the paper's single-node pipeline with the mesh
+axis as the bucket dimension (DESIGN.md §8):
+
+  1. **sampling** — every shard samples its *valid prefix*; samples are
+     all-gathered over the level's domain and ``groups - 1`` shared
+     splitters selected (per-axis-sized, never global);
+  2. **classification** — branchless two-searchsorted descent with the
+     distributed equality-bucket rule (paper §4.4): an element equal to a
+     duplicated splitter stripes across the whole span of groups covering
+     that splitter run, so heavy duplicates are not a balance problem;
+  3. **stable block partition** — ``core.partition.stable_partition``
+     with ``groups + 1`` buckets (the extra bucket collects sentinel pads,
+     which must never travel) on the caller's engine ("xla" | "pallas");
+  4. **exchange** — one capacity-padded ``all_to_all`` over this level's
+     axis only, plus the count vector; arrivals are re-compacted to a
+     valid prefix by a 2-bucket stable partition (the same engine again),
+     so the next level sees the same invariant it started from.
+
+**Re-split retry** instead of truncate-on-overflow: if any (sender, group)
+chunk would exceed its capacity anywhere in the domain (one ``pmax``),
+the next round *recomputes the splitters from the observed histogram* —
+every shard counts its keys below each candidate point of a fresh sample
+draw, a ``psum`` makes the counts global, and
+``sampling.splitters_from_histogram`` picks candidates at the exact
+balanced ranks.  Rounds are a statically unrolled, bounded loop (the
+recursion-free discipline of ``core/ips4o.py``); only if every round
+overflows does the exchange truncate deterministically and raise the
+overflow flag — the last resort, no longer the first response.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling
+from repro.core.partition import stable_partition
+from repro.dist.levels import Level
+
+__all__ = ["exchange_level", "compact_valid", "tile_for"]
+
+Pytree = Any
+
+
+def tile_for(n: int, pref: int) -> int:
+    """A partition tile that divides ``n`` (static), at most ``pref``."""
+    return max(1, math.gcd(n, pref))
+
+
+def compact_valid(
+    arrays: Pytree, valid: jax.Array, tile: int, engine: str
+) -> Pytree:
+    """Stably move valid elements to the front (2-bucket partition).
+
+    Key order among valid elements is preserved because the block
+    partition is stable (DESIGN.md §2).
+    """
+    dest = jnp.where(valid, 0, 1).astype(jnp.int32)
+    out, _ = stable_partition(dest, arrays, 2, tile, engine=engine)
+    return out
+
+
+def _classify(
+    keys: jax.Array, spl: jax.Array, valid: jax.Array, groups: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Destination group per element (pads -> trash bucket ``groups``) and
+    per-group counts, with equality-bucket striping across splitter runs."""
+    n = keys.shape[0]
+    lo = jnp.searchsorted(spl, keys, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(spl, keys, side="right").astype(jnp.int32)
+    span = hi - lo + 1
+    # stripe by a multiplicative hash of the position, NOT the raw
+    # position: structured inputs (EightDup's i^8 lattice) place every
+    # copy of a heavy value at one residue class, so ``pos % span`` sends
+    # the whole run to a single group; the Fibonacci-hash high bits
+    # decorrelate the stripe from any input lattice
+    pos = jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761)
+    stripe = (pos >> jnp.uint32(16)).astype(jnp.int32) % jnp.maximum(span, 1)
+    dest = jnp.minimum(lo + stripe, groups - 1)
+    dest = jnp.where(valid, dest, groups)
+    counts = jnp.bincount(dest, length=groups + 1)[:groups]
+    return dest, counts
+
+
+def _observed_cumulative(
+    keys: jax.Array, valid: jax.Array, cands: jax.Array, domain
+) -> jax.Array:
+    """Global #keys strictly below each candidate point (one ``psum``)."""
+    m = cands.shape[0]
+    below = jnp.searchsorted(cands, keys, side="right").astype(jnp.int32)
+    below = jnp.where(valid, below, m + 1)  # pads count nowhere
+    hist = jnp.bincount(below, length=m + 2)
+    cum = jnp.cumsum(hist)[:m].astype(jnp.int32)  # cum[j] = #{key < cands[j]}
+    return jax.lax.psum(cum, domain)
+
+
+def _split_kv(arrays: Pytree):
+    vals = {k: v for k, v in arrays.items() if k != "k"}
+    return arrays["k"], vals
+
+
+def exchange_level(
+    arrays: Pytree,
+    m: jax.Array,
+    level: Level,
+    *,
+    engine: str,
+    tile: int,
+    seed: int,
+    level_idx: int,
+    retries: int = 2,
+) -> Tuple[Pytree, jax.Array, jax.Array]:
+    """Run one level's exchange on this shard's ``arrays`` dict.
+
+    ``arrays`` is a dict whose ``"k"`` leaf holds (n_in,) keyspace-encoded
+    keys with the valid prefix [0, m) (sentinel pads beyond); every other
+    entry is a values pytree riding the same partitions.  Returns
+    (arrays (n_out,), m', overflowed) — ``overflowed`` is True only when
+    every re-split round still exceeded capacity somewhere in the domain
+    (the exchange then truncated deterministically).
+    """
+    n = arrays["k"].shape[0]
+    g, cap = level.groups, level.capacity
+    sent = sampling.sentinel_for(arrays["k"].dtype)
+
+    if g == 1:
+        # degenerate axis: no collective — pad (or truncate + flag, the
+        # same last-resort contract as the d > 1 exchange) to n_out.
+        # A truncated buffer keeps the FIRST n_out slots: if they were all
+        # valid (m > n_out) every kept slot stays valid; otherwise the kept
+        # tail is already sentinel pads — no rewriting either way.
+        n_out = level.n_out
+        m_new = jnp.minimum(m, jnp.asarray(n_out, jnp.int32))
+        overflow = m > n_out
+        if n_out >= n:
+            pad = n_out - n
+
+            def grow(a, fill):
+                padding = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+                return jnp.pad(a, padding, constant_values=fill)
+
+            key, vals = _split_kv(arrays)
+            out = {
+                "k": grow(key, sent),
+                **jax.tree.map(lambda a: grow(a, 0), vals),
+            }
+            return out, m_new, overflow
+        return jax.tree.map(lambda a: a[:n_out], arrays), m_new, overflow
+
+    valid = jnp.arange(n, dtype=jnp.int32) < m
+    my = jax.lax.axis_index(level.domain)
+    spl = None
+    dest_keep = jnp.zeros((n,), jnp.int32)
+    done = jnp.asarray(False)
+
+    for r in range(max(0, retries) + 1):
+        rng = jax.random.fold_in(
+            jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(seed), level_idx), r
+            ),
+            my,
+        )
+        pos = sampling.sample_indices(rng, level.oversample, 0, m)
+        local_sample = jnp.take(arrays["k"], pos, axis=0)
+        gathered = jax.lax.all_gather(local_sample, level.domain, tiled=True)
+        cands = jnp.sort(gathered)
+        if r == 0:
+            spl = sampling.select_splitters(cands, g)
+        else:
+            # observed-histogram re-split: exact global ranks at the fresh
+            # candidate points replace the failed sample estimate
+            cum = _observed_cumulative(arrays["k"], valid, cands, level.domain)
+            total = jax.lax.psum(m, level.domain)
+            new_spl = sampling.splitters_from_histogram(cands, cum, g, total)
+            spl = jnp.where(done, spl, new_spl)
+        dest, counts = _classify(arrays["k"], spl, valid, g)
+        over_here = jnp.any(counts > cap)
+        over_r = jax.lax.pmax(over_here.astype(jnp.int32), level.domain) > 0
+        if r == 0:
+            dest_keep = dest
+            done = ~over_r
+        else:
+            dest_keep = jnp.where(done, dest_keep, dest)
+            done = jnp.logical_or(done, ~over_r)
+    overflowed = ~done
+
+    # stable block partition with a trash bucket for pads (never sent)
+    parts, offsets = stable_partition(
+        dest_keep, arrays, g + 1, tile_for(n, tile), engine=engine
+    )
+    counts = jnp.diff(offsets)[:g]
+    send_counts = jnp.minimum(counts, cap)  # truncation only past the last retry
+
+    idx = offsets[:g, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    in_cap = jnp.arange(cap, dtype=jnp.int32)[None, :] < send_counts[:, None]
+    gidx = jnp.minimum(idx, n - 1).reshape(-1)
+
+    def pack(a, fill):
+        chunk = jnp.take(a, gidx, axis=0).reshape((g, cap) + a.shape[1:])
+        mask = in_cap.reshape((g, cap) + (1,) * (a.ndim - 1))
+        return jnp.where(mask, chunk, fill)
+
+    def a2a(x):
+        return jax.lax.all_to_all(
+            x, level.axis, split_axis=0, concat_axis=0, tiled=True
+        )
+
+    key_part, val_part = _split_kv(parts)
+    recv_k = a2a(pack(key_part, sent))
+    recv_v = jax.tree.map(lambda a: a2a(pack(a, jnp.zeros((), a.dtype))), val_part)
+    recv_counts = a2a(send_counts)
+    m_next = jnp.sum(recv_counts).astype(jnp.int32)
+
+    flat = {
+        "k": recv_k.reshape(g * cap),
+        **jax.tree.map(lambda a: a.reshape((g * cap,) + a.shape[2:]), recv_v),
+    }
+    arrived = (
+        jnp.arange(cap, dtype=jnp.int32)[None, :] < recv_counts[:, None]
+    ).reshape(-1)
+    out = compact_valid(flat, arrived, tile_for(g * cap, tile), engine)
+    return out, m_next, overflowed

@@ -1,0 +1,116 @@
+"""Level schedule for the multi-level distributed sort (DESIGN.md §8).
+
+AMS-sort runs the paper's sample → classify → partition → exchange
+recursion once per *level of the machine hierarchy*; the journal follow-up
+(*Engineering In-place (Shared-memory) Sorting Algorithms*) shows the same
+recursion scales across memory levels, and the Fugaku evaluation confirms
+multi-level splitter exchange is what keeps collective volume per-axis-
+sized at scale.  Exactly as ``core/ips4o.py`` flattens the paper's bucket
+recursion into at most two static level passes, this module flattens the
+*mesh* recursion into an explicit, statically planned schedule:
+
+  axes = ("pod", "data")   ->   [ Level(axis="pod",  groups=p0, ...),
+                                  Level(axis="data", groups=p1, ...) ]
+
+Level l collapses mesh axis ``axes[l]``: shards sharing the leading axis
+indices ``axes[:l]`` form a *group* that owns one contiguous key range and
+is itself distributed over ``domain = axes[l:]``.  The exchange at level l
+is an ``all_to_all`` over ``axes[l]`` only (fan-in = that axis size, not
+the global device count), against a splitter set of ``groups - 1`` values
+(per-axis-sized, not global).  After the last level every shard owns a
+contiguous global range and sorts locally.
+
+Capacities are *expectation-based*: the balanced data volume entering any
+level is ~``n_local`` per shard (the total is conserved), so each
+per-(sender, group) chunk gets ``ceil(n_local / groups) * slack`` slots —
+``slack`` is headroom over the balanced expectation, the paper's beta-like
+overpartitioning safety, learned per (n_local, d, dtype) by the ``dist:``
+plan family (``ops/plan.py``).  Padded shard size after level l is
+therefore ~``slack * n_local`` at every level, not ``slack**l``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Tuple, Union
+
+from repro.core import sampling
+
+__all__ = ["Level", "plan_schedule", "normalize_axes", "default_oversample"]
+
+AxisNames = Union[str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Level:
+    """One flattened step of the mesh recursion (one exchanged axis)."""
+
+    axis: str                  # mesh axis collapsed by this level's all_to_all
+    domain: Tuple[str, ...]    # axes[l:]: the group this level's splitters span
+    groups: int                # size of ``axis`` = buckets = collective fan-in
+    n_in: int                  # padded per-shard element count entering the level
+    capacity: int              # per-(sender, group) chunk slots in the exchange
+    oversample: int            # per-shard sample size for this level's splitters
+
+    @property
+    def n_out(self) -> int:
+        """Padded per-shard element count after this level's exchange."""
+        return self.groups * self.capacity
+
+
+def normalize_axes(axes: AxisNames) -> Tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def default_oversample(n_total: int) -> int:
+    """Per-shard sample size: the paper's alpha scaled for the distributed
+    setting (splitters must be good enough that no retry is the common
+    case), as seeded by ``core/distributed.py``."""
+    return max(32, sampling.oversampling_factor(n_total) * 16)
+
+
+def _round_up(x: int, unit: int = 128) -> int:
+    return -(-x // unit) * unit
+
+
+def plan_schedule(
+    axis_sizes: Mapping[str, int],
+    axes: AxisNames,
+    n_local: int,
+    *,
+    slack: float = 2.0,
+    oversample: int = 0,
+) -> Tuple[Level, ...]:
+    """The explicit level loop for ``axes`` (outermost first).
+
+    ``axis_sizes`` maps mesh axis name -> size (``dict(mesh.shape)``).
+    ``oversample=0`` uses :func:`default_oversample`.  Capacities round up
+    to 128 lanes and never drop below one lane register, mirroring the
+    single-level seed formula so the compat shim is shape-identical.
+    """
+    names = normalize_axes(axes)
+    if not names:
+        raise ValueError("at least one mesh axis is required")
+    sizes = [int(axis_sizes[a]) for a in names]
+    d_total = 1
+    for s in sizes:
+        d_total *= s
+    if oversample <= 0:
+        oversample = default_oversample(n_local * d_total)
+    levels = []
+    n = n_local
+    for lvl, (name, g) in enumerate(zip(names, sizes)):
+        # headroom over the *balanced* per-pair expectation n_local / g;
+        # the padded size entering deeper levels stays ~slack * n_local
+        cap = _round_up(max(128, int(-(-n_local * slack // g))))
+        levels.append(
+            Level(
+                axis=name,
+                domain=tuple(names[lvl:]),
+                groups=g,
+                n_in=n,
+                capacity=cap,
+                oversample=oversample,
+            )
+        )
+        n = g * cap
+    return tuple(levels)

@@ -8,7 +8,6 @@ same calls lower natively.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax

@@ -29,7 +29,6 @@ per-bucket block multisets.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ from __future__ import annotations
 import json
 import re
 from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 __all__ = ["HW", "collective_bytes", "roofline_terms", "RooflineReport",
            "model_flops"]

@@ -14,7 +14,6 @@ import argparse
 import sys
 
 import jax
-import numpy as np
 
 
 def main(argv=None) -> int:

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.partition import partition_permutation
-from repro.models.layers import DP, dense, init_dense, shard_hint
+from repro.models.layers import dense, init_dense, shard_hint
 from repro.models.policy import current_policy
 
 __all__ = ["init_moe", "moe_ffn", "sort_dispatch", "expert_capacity"]

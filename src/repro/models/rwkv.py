@@ -13,8 +13,7 @@ parameter counts match rwkv6-1.6b at the assigned config.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -23,8 +23,6 @@ layer params, so decode is a single fused scan as well.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax

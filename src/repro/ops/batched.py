@@ -139,7 +139,7 @@ def _batched_smallest(
 ) -> Tuple[jax.Array, jax.Array]:
     """Per-row (sorted kk smallest encoded keys, their original indices).
 
-    The batched form of ``ops.topk._smallest``: same static W-aligned
+    The batched form of ``ops.topk.smallest_encoded``: same static W-aligned
     prefix P covers the rank-(kk-1) bucket of *every* row, so the base
     case runs over [0, P) of each row only.
     """

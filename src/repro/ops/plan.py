@@ -36,7 +36,14 @@ that decision:
     merge engine + merge-path tile for an external sort at that chunk
     size x fan-in (``stream_plan``), tuned by timing a synthetic pairwise
     merge at the chunk shape — the first-round merge every tournament
-    pass in ``repro.stream`` actually runs.
+    pass in ``repro.stream`` actually runs;
+  * the **dist: key family** (DESIGN.md §8) plans the multi-level
+    distributed sort: ``dist:n_local=8192:d=8:dtype=float32`` records the
+    capacity factor (slack), per-shard oversampling, and engine
+    (``dist_plan``), tuned by a host-side *capacity simulation* — replay
+    the level-0 splitter selection on adversarial synthetic draws and keep
+    the cheapest candidate whose worst per-pair fill leaves headroom —
+    because collective volume scales linearly with the capacity factor.
 """
 from __future__ import annotations
 
@@ -53,7 +60,7 @@ import numpy as np
 
 from repro.core.ips4o import SortConfig, plan_levels
 
-__all__ = ["PlanCache", "StreamPlan", "get_sorter", "default_cache"]
+__all__ = ["PlanCache", "StreamPlan", "DistPlan", "get_sorter", "default_cache"]
 
 _OPS = ("sort", "argsort", "topk", "bottomk")
 
@@ -148,6 +155,30 @@ class StreamPlan:
 # merge-path tiles the stream autotune sweeps (the kernel's (T, T) rank
 # matrix bounds the useful range)
 _STREAM_TILES = (128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPlan:
+    """Tuned knobs for one distributed-sort family (DESIGN.md §8): the
+    capacity factor (slack over the balanced per-pair expectation), the
+    per-shard oversampling, and the partition engine ``repro.dist`` uses
+    for every level of a sort at this (n_local, d, dtype)."""
+
+    n_local: int
+    d: int
+    slack: float = 2.0
+    oversample: int = 32
+    engine: str = "xla"
+
+
+# capacity factors and oversample multipliers the dist autotune sweeps —
+# ascending, so the first passing candidate is the cheapest (collective
+# volume scales linearly with slack)
+_DIST_SLACKS = (1.5, 2.0, 2.5, 3.0)
+_DIST_OVERSAMPLE_MULS = (1, 2, 4)
+# a candidate passes when the simulated worst per-pair fill stays under
+# this fraction of capacity (headroom against draws the sweep didn't see)
+_DIST_FILL_MARGIN = 0.9
 
 
 def _bench(f: Callable, x: jax.Array, iters: int = 3) -> float:
@@ -392,6 +423,154 @@ class PlanCache:
             "config": {"merge_tile": best.merge_tile, "engine": best.engine},
             "engine": best.engine,
             "us": round(best_t * 1e6, 1),
+            "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        self._save()
+        return best
+
+    # -- dist: key family (multi-level exchange geometry) -------------------
+    @staticmethod
+    def _dist_key(n_local: int, d: int, dtype) -> str:
+        return f"dist:n_local={n_local}:d={d}:dtype={jnp.dtype(dtype).name}"
+
+    def dist_plan(
+        self,
+        n_local: int,
+        d: int,
+        dtype,
+        *,
+        tune: bool = False,
+        engine: Optional[str] = None,
+    ) -> DistPlan:
+        """Capacity factor × oversampling × engine for a distributed sort
+        at (n_local, d, dtype) — DESIGN.md §8.  A persisted ``dist:`` plan
+        wins; ``tune=True`` runs the host-side capacity simulation and
+        persists the winner; otherwise the seed defaults.  An explicit
+        ``engine`` (not None/"auto") overrides while keeping the planned
+        capacity knobs.
+
+        >>> import os, tempfile
+        >>> import jax.numpy as jnp
+        >>> pc = PlanCache(path=os.path.join(tempfile.mkdtemp(), "p.json"))
+        >>> pc.dist_plan(8192, 8, jnp.float32).slack  # no plan: defaults
+        2.0
+        >>> pc.dist_plan(8192, 8, jnp.float32, engine="pallas").engine
+        'pallas'
+        """
+        if engine == "auto":
+            engine = None
+        key = self._dist_key(n_local, d, dtype)
+        entry = self._plans.get(key)
+        cfg = entry.get("config") if isinstance(entry, dict) else None
+        if isinstance(cfg, dict):
+            slack = cfg.get("slack")
+            ovs = cfg.get("oversample")
+            eng = cfg.get("engine")
+            if (
+                isinstance(slack, (int, float))
+                and isinstance(ovs, int)
+                and eng in ("xla", "pallas")
+            ):
+                return DistPlan(n_local, d, float(slack), ovs, engine or eng)
+        if tune:
+            plan = self._autotune_dist(n_local, d, dtype)
+            if engine is not None:
+                plan = dataclasses.replace(plan, engine=engine)
+            return plan
+        from repro.dist.levels import default_oversample  # lazy: dist layers on ops
+
+        default_eng = engine or self.engine_hint(n_local, dtype) or (
+            "pallas" if jax.default_backend() == "tpu" else "xla"
+        )
+        return DistPlan(
+            n_local, d, oversample=default_oversample(n_local * d),
+            engine=default_eng,
+        )
+
+    def _autotune_dist(self, n_local: int, d: int, dtype) -> DistPlan:
+        """Host-side capacity simulation: for ascending (slack, oversample)
+        candidates, replay the level-0 splitter selection + equality-bucket
+        striping on adversarial synthetic draws (uniform / heavy-duplicate
+        / exponential, the skew families of ``data.distributions``) and
+        keep the cheapest candidate whose worst per-pair fill stays under
+        ``_DIST_FILL_MARGIN`` of capacity.  No devices needed — the
+        simulation is numpy — so the sweep is paid once per machine like
+        every other plan family."""
+        from repro.dist.levels import default_oversample, plan_schedule
+
+        key = self._dist_key(n_local, d, dtype)
+        dtype = jnp.dtype(dtype)
+        n = n_local * d
+        base_ovs = default_oversample(n)
+
+        def draws(rng):
+            if jnp.issubdtype(dtype, jnp.floating):
+                yield rng.standard_normal(n_local).astype(np.float32)
+                yield rng.exponential(size=n_local).astype(np.float32)
+                yield rng.choice(97, size=n_local).astype(np.float32)  # dup-heavy
+            else:
+                yield rng.integers(0, 1 << 30, n_local, dtype=np.int64)
+                yield rng.integers(0, 97, n_local, dtype=np.int64)  # dup-heavy
+                yield (rng.exponential(size=n_local) * (1 << 20)).astype(np.int64)
+
+        def worst_fill(slack: float, oversample: int) -> float:
+            cap = plan_schedule(
+                {"x": d}, "x", n_local, slack=slack, oversample=oversample
+            )[0].capacity
+            worst = 0.0
+            for seed in range(3):
+                rng = np.random.default_rng(seed)
+                for x in draws(rng):
+                    # one shard's post-pre-exchange stripe: representative
+                    # of the global distribution by construction
+                    sample = rng.choice(x, size=min(oversample * d, n_local))
+                    spl = np.sort(sample)[
+                        np.clip((np.arange(1, d) * len(sample)) // d,
+                                0, len(sample) - 1)
+                    ]
+                    lo = np.searchsorted(spl, x, side="left")
+                    hi = np.searchsorted(spl, x, side="right")
+                    span = np.maximum(hi - lo + 1, 1)
+                    # the same hashed equality striping the device classifier
+                    # uses (exchange._classify) — a raw pos % span would
+                    # validate the slack against a different pipeline
+                    pos = (
+                        np.arange(n_local, dtype=np.uint64) * 2654435761
+                    ) & 0xFFFFFFFF
+                    stripe = (pos >> 16).astype(np.int64) % span
+                    dest = np.minimum(lo + stripe, d - 1)
+                    counts = np.bincount(dest, minlength=d)
+                    worst = max(worst, counts.max() / cap)
+            return worst
+
+        best = None
+        for slack in _DIST_SLACKS:
+            for mul in _DIST_OVERSAMPLE_MULS:
+                ovs = base_ovs * mul
+                fill = worst_fill(slack, ovs)
+                if fill <= _DIST_FILL_MARGIN:
+                    best = DistPlan(n_local, d, slack, ovs)
+                    break
+            if best is not None:
+                break
+        if best is None:  # every candidate overflowed: largest headroom
+            best = DistPlan(
+                n_local, d, _DIST_SLACKS[-1],
+                base_ovs * _DIST_OVERSAMPLE_MULS[-1],
+            )
+            fill = worst_fill(best.slack, best.oversample)
+        eng = self.engine_hint(n_local, dtype) or (
+            "pallas" if jax.default_backend() == "tpu" else "xla"
+        )
+        best = dataclasses.replace(best, engine=eng)
+        self._plans[key] = {
+            "config": {
+                "slack": best.slack,
+                "oversample": best.oversample,
+                "engine": best.engine,
+            },
+            "engine": best.engine,
+            "sim_max_fill": round(float(fill), 3),
             "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
         }
         self._save()

@@ -41,7 +41,7 @@ from repro.core.ips4o import (
 )
 from repro.ops import keyspace
 
-__all__ = ["topk", "bottomk"]
+__all__ = ["topk", "bottomk", "smallest_encoded"]
 
 
 def _prefix_limit(k: int, W: int, n_pad: int) -> int:
@@ -49,10 +49,14 @@ def _prefix_limit(k: int, W: int, n_pad: int) -> int:
     return min(n_pad, -(-(k + W) // W) * W)
 
 
-def _smallest(enc: jax.Array, kk: int, cfg: SortConfig) -> Tuple[jax.Array, jax.Array]:
+def smallest_encoded(
+    enc: jax.Array, kk: int, cfg: SortConfig
+) -> Tuple[jax.Array, jax.Array]:
     """(sorted k smallest encoded keys, their original indices).
 
     ``enc`` must be in the ordered-uint keyspace; ``0 < kk <= n`` static.
+    This is the splitter-filter primitive ``repro.dist`` reuses as the
+    per-shard candidate filter of the distributed rank-k query.
     """
     n = enc.shape[0]
     arrays = {"k": enc, "v": jnp.arange(n, dtype=jnp.int32)}
@@ -109,7 +113,7 @@ def bottomk(
     kk = max(0, min(int(k), n))
     if kk == 0:
         return keys[:0], jnp.zeros((0,), jnp.int32)
-    out, idx = _smallest(keyspace.encode(keys), kk, with_engine(cfg, engine, keys))
+    out, idx = smallest_encoded(keyspace.encode(keys), kk, with_engine(cfg, engine, keys))
     return keyspace.decode(out, keys.dtype), idx
 
 
@@ -141,5 +145,5 @@ def topk(
     kk = max(0, min(int(k), n))
     if kk == 0:
         return keys[:0], jnp.zeros((0,), jnp.int32)
-    out, idx = _smallest(~keyspace.encode(keys), kk, with_engine(cfg, engine, keys))
+    out, idx = smallest_encoded(~keyspace.encode(keys), kk, with_engine(cfg, engine, keys))
     return keyspace.decode(~out, keys.dtype), idx

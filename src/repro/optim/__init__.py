@@ -1,3 +1,13 @@
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
-from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
 from repro.optim.compression import compress_grads, decompress_grads
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "compress_grads",
+    "decompress_grads",
+]

@@ -1,1 +1,3 @@
-from repro.serve.engine import ServeConfig, Engine, make_prefill_step, make_decode_step
+from repro.serve.engine import Engine, ServeConfig, make_decode_step, make_prefill_step
+
+__all__ = ["ServeConfig", "Engine", "make_prefill_step", "make_decode_step"]

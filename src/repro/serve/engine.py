@@ -8,16 +8,14 @@ temperature sampling) with continuous batching via serve/scheduler.py.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.launch.shardings import (
-    ShardingStrategy, batch_specs, cache_specs, named, param_specs,
+    ShardingStrategy, cache_specs, named, param_specs,
 )
 from repro.models.transformer import forward, init_decode_cache, init_model
 

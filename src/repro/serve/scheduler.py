@@ -31,11 +31,18 @@ view* of persisted + live queues (DESIGN.md §7): the backlog is already a
 sorted run, the live candidates come out of ``bottomk`` sorted, and one
 stable 2-way ``repro.stream.merge`` interleaves them — backlog winning
 ties (it is strictly older, so FIFO is preserved across the restart).
+
+Queues too large for one device admit **across a mesh axis**
+(``next_batch(mesh=...)``, DESIGN.md §8): the composite keys shard over
+the axis, every shard runs the splitter-based partial sort as its local
+filter, and a single-shard finish over the gathered per-shard candidates
+selects the batch — ``repro.dist.bottomk``, with semantics identical to
+the single-device path (shortest remaining first, FIFO ties).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -99,9 +106,15 @@ class Scheduler:
         rem = np.asarray([r.remaining for r in combined], np.int64)
         self.backlog = [combined[i] for i in np.argsort(rem, kind="stable")]
 
-    def next_batch(self) -> List[Request]:
+    def next_batch(self, *, mesh=None, axes="data") -> List[Request]:
         """Admit up to batch_size requests, shortest-remaining-first,
         FIFO among equal ``remaining``.
+
+        With ``mesh`` (a ``jax.sharding.Mesh``), live selection runs the
+        *distributed* bottom-k over ``axes`` (``repro.dist.bottomk``,
+        DESIGN.md §8): each shard splitter-filters its slice of the
+        composite keys and a single-shard finish selects the batch — same
+        admission order, queue sizes beyond one device.
 
         Rank-k selection on a composite (remaining, arrival-index) key via
         the plan-cached ``ops.bottomk`` — requests that retire together sit
@@ -120,7 +133,9 @@ class Scheduler:
         kk = min(self.batch_size, len(self.queue) + len(self.backlog))
         if not kk:
             return []
-        order = self._select_live(min(self.batch_size, len(self.queue)))
+        order = self._select_live(
+            min(self.batch_size, len(self.queue)), mesh=mesh, axes=axes
+        )
         if not self.backlog:
             return self._take(order)
         bk = np.asarray(
@@ -153,12 +168,18 @@ class Scheduler:
             batch.append(next(back_iter) if s < len(bk) else next(live_iter))
         return batch
 
-    def _select_live(self, kk: int) -> np.ndarray:
+    def _select_live(self, kk: int, mesh=None, axes="data") -> np.ndarray:
         """Selection order (queue positions) of the live admission
         candidates — the bottomk path shared by both admission views."""
         q = len(self.queue)
         if not q or not kk:
             return np.zeros((0,), np.int64)
+        if mesh is not None:
+            d = 1
+            for a in (axes,) if isinstance(axes, str) else tuple(axes):
+                d *= mesh.shape[a]
+            if d > 1:
+                return self._select_live_dist(kk, mesh, axes, d)
         n_pad = 1 << (q - 1).bit_length() if q > 1 else 1
         comp = self._composite_keys(n_pad)
         if comp is None:
@@ -173,6 +194,36 @@ class Scheduler:
             n_pad, jnp.int32, "bottomk", k=min(self.batch_size, n_pad)
         )
         _, order = f(jnp.asarray(keys))
+        order = np.asarray(order)
+        return order[order < q][:kk]  # drop sentinel pad slots
+
+    def _select_live_dist(self, kk: int, mesh, axes, d: int) -> np.ndarray:
+        """Distributed live selection (DESIGN.md §8): shard the composite
+        keys over the mesh axis and admit via ``repro.dist.bottomk`` —
+        splitter-filter per shard, single-shard finish.  Same composite
+        (remaining, arrival) order, the same int32-overflow host fallback."""
+        import jax
+        import jax.numpy as jnp_
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro import dist
+
+        q = len(self.queue)
+        # pad to a pow2 shape divisible by d so shards are equal-sized
+        # (plan-style O(log n) compile shapes survive the sharding)
+        n_pad = 1 << (max(q, d) - 1).bit_length() if max(q, d) > 1 else 1
+        if n_pad % d:
+            n_pad = -(-n_pad // d) * d
+        comp = self._composite_keys(n_pad)
+        if comp is None:
+            rem = np.asarray([r.remaining for r in self.queue], np.int64)
+            return np.lexsort((np.arange(q), rem))[:kk]
+        keys = np.full(n_pad, _SENTINEL, np.int32)
+        keys[:q] = comp
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        spec = P(names if len(names) > 1 else names[0])
+        xs = jax.device_put(jnp_.asarray(keys), NamedSharding(mesh, spec))
+        _, order = dist.bottomk(xs, min(self.batch_size, n_pad), mesh, axes)
         order = np.asarray(order)
         return order[order < q][:kk]  # drop sentinel pad slots
 

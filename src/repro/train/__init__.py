@@ -1,1 +1,3 @@
 from repro.train.trainer import TrainConfig, Trainer, make_train_step
+
+__all__ = ["TrainConfig", "Trainer", "make_train_step"]

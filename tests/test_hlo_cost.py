@@ -6,7 +6,6 @@ same, matching XLA's own numbers on the unrolled module.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_cost import analyze_hlo

@@ -1,7 +1,6 @@
 """Per-kernel validation: interpret=True Pallas vs pure-jnp ref oracles,
 swept across shapes and dtypes (the kernel contract from the brief)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

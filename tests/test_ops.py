@@ -8,7 +8,6 @@ group_by (all three engines), and the plan cache.
 import os
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -1,0 +1,81 @@
+"""Unit tests for the CI perf-regression gate (benchmarks/check_regression)."""
+import json
+
+from benchmarks.check_regression import compare, is_tracked_metric, main
+
+
+def _bench(us):
+    return {"sort_x": [{"bench": "seq", "n": 1024, "dtype": "float32",
+                        "algo": "ips4o", "us": us, "speedup": 2.0}]}
+
+
+def test_tracked_metric_classification():
+    assert is_tracked_metric("s_per_call")
+    assert is_tracked_metric("batched_us")
+    assert is_tracked_metric("part_ns_per_elem")
+    assert not is_tracked_metric("speedup")
+    assert not is_tracked_metric("coll_bytes_per_dev")
+    assert not is_tracked_metric("n")
+    # reference-implementation columns are comparisons, not product paths
+    assert not is_tracked_metric("loop_us")
+    assert not is_tracked_metric("single_us")
+
+
+def test_within_threshold_passes():
+    fails, warns = compare(_bench(100.0), _bench(120.0), 0.25, [])
+    assert not fails and not warns
+
+
+def test_regression_fails():
+    fails, _ = compare(_bench(100.0), _bench(130.0), 0.25, [])
+    assert len(fails) == 1 and "+30%" in fails[0]
+
+
+def test_improvement_passes():
+    fails, _ = compare(_bench(100.0), _bench(50.0), 0.25, [])
+    assert not fails
+
+
+def test_new_and_missing_rows_warn_only():
+    base = _bench(100.0)
+    fresh = {"sort_x": [dict(base["sort_x"][0], n=2048)]}
+    fails, warns = compare(base, fresh, 0.25, [])
+    assert not fails
+    assert any("new row" in w for w in warns)
+    assert any("missing from fresh" in w for w in warns)
+
+
+def test_absent_bench_module_does_not_warn_missing():
+    # CI runs --only a subset: baseline-only modules are not "missing"
+    fails, warns = compare(_bench(100.0), {}, 0.25, [])
+    assert not fails and not warns
+
+
+def test_allowlist_downgrades_to_warning():
+    allow = [{"bench": "sort_x", "metric": "us",
+              "match": {"algo": "ips4o", "n": 1024},
+              "reason": "intentional: engine default changed"}]
+    fails, warns = compare(_bench(100.0), _bench(200.0), 0.25, allow)
+    assert not fails
+    assert any("allowlisted" in w for w in warns)
+    # allowlist entries must actually match to apply
+    fails, _ = compare(_bench(100.0), _bench(200.0), 0.25,
+                       [{"match": {"algo": "other"}, "reason": "no"}])
+    assert fails
+
+
+def test_main_end_to_end(tmp_path, capsys):
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    base.write_text(json.dumps({"schema": 1, "benches": _bench(100.0)}))
+    fresh.write_text(json.dumps({"schema": 1, "benches": _bench(200.0)}))
+    rc = main(["--baseline", str(base), "--fresh", str(fresh),
+               "--allowlist", str(tmp_path / "none.json")])
+    assert rc == 1
+    assert "FAIL" in capsys.readouterr().out
+    fresh.write_text(json.dumps({"schema": 1, "benches": _bench(110.0)}))
+    assert main(["--baseline", str(base), "--fresh", str(fresh),
+                 "--allowlist", str(tmp_path / "none.json")]) == 0
+    # a missing baseline is not an error (first run on a fresh branch)
+    assert main(["--baseline", str(tmp_path / "no.json"),
+                 "--fresh", str(fresh)]) == 0
