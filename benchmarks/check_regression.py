@@ -27,7 +27,7 @@ Matching and tracking rules:
 Wall clocks are machine-relative; the gate compares runs from the same CI
 runner class against a baseline refreshed whenever a PR intentionally
 moves a number (regenerate via ``python -m benchmarks.run --quick --only
-sort_sequential,sort_batched,sort_external,sort_distributed``).
+sort_sequential,sort_batched,sort_external,sort_distributed,sort_classifier``).
 """
 from __future__ import annotations
 

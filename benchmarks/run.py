@@ -10,6 +10,7 @@
   sort_batched       DESIGN.md §6     batched (B, n) sort vs loop-over-rows
   sort_external      DESIGN.md §7     external_sort vs single-shot + merge
   sort_distributed   DESIGN.md §8     multi-level mesh sort, volume per level
+  sort_classifier    DESIGN.md §9     classifier engines: tree/radix/learned/auto
 
 ``python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`` prints one
 CSV block per table plus a Table-1-style summary, and writes every row to
@@ -34,6 +35,7 @@ MODULES = [
     "sort_batched",
     "sort_external",
     "sort_distributed",
+    "sort_classifier",
 ]
 
 

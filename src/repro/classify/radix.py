@@ -1,0 +1,75 @@
+"""The radix bit-extractor classifier (IPS2Ra — arXiv 2009.13569 §5).
+
+*Engineering In-place (Shared-memory) Sorting Algorithms* shows the IPS4o
+partition pipeline wins substantially more when the branchless comparison
+tree is replaced by a radix extractor: bucket = the next ``log2(k)`` bits
+of the key.  No sampling pass, no splitter tree, one shift + one mask per
+element — the cheapest classifier a total-order uint keyspace admits.
+
+Our keyspace encoding (``ops/keyspace.py``) maps every supported dtype to
+a same-width unsigned integer whose *bit-pattern order equals the key
+order*, so the extractor drops in for free at the ``repro.ops`` boundary:
+
+    j     = (key >> shift) & (k - 1),   shift = bits - consumed - log2(k)
+    local = 2j + (key == sentinel)
+
+``consumed`` is the number of bits already fixed by earlier radix levels:
+level 1 consumes the top ``log2(k1)`` bits, so level 2's shift moves down
+by exactly that much — the "per-level shift" of the paper's recursive
+MSB radix.  The shift clamps at 0 for narrow keys; within a radix-aligned
+segment the bits above the clamped mask are constant, so bucket ids stay
+monotone in the key and the partition/base-case contract is unharmed.
+
+The equality rule mirrors the tree classifier's last bucket: ``eq`` fires
+only for keys equal to the dtype sentinel (all-ones — the encoding of the
+pad key and of the NaN class), so pads and NaN runs land in an *odd*
+(equality) bucket that deeper levels and the base case skip, exactly as
+with sampled splitters.  Other duplicates get no equality buckets — the
+trade of this engine: a value with more than ``slack * W / (2k)`` copies
+overflows its bucket and triggers the robustness fallback, which is why
+the "auto" router sends duplicate-heavy inputs elsewhere (DESIGN.md §9).
+
+Monotonicity (required by the stable-partition + (bucket, key) base-case
+contract): ``j`` is a nondecreasing step function of the key within the
+level's domain whenever the domain agrees on the bits above the mask —
+true globally at level 1 and true per segment at level 2 *because* level 1
+was also a radix level.  ``repro.ops.segmented_sort`` therefore does NOT
+accept this engine for user-supplied (arbitrary-range) segments.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampling import sentinel_for
+
+__all__ = ["radix_shift", "radix_bucket_ids"]
+
+
+def radix_shift(dtype, k: int, consumed_bits: int = 0) -> int:
+    """Static right-shift placing the next log2(k) key bits at the bottom."""
+    dtype = jnp.dtype(dtype)
+    if dtype.kind != "u":
+        raise ValueError(
+            f"radix classifier needs keyspace-encoded (unsigned) keys, got {dtype}"
+        )
+    bits = dtype.itemsize * 8
+    return max(bits - consumed_bits - int(math.log2(k)), 0)
+
+
+def radix_bucket_ids(keys: jax.Array, k: int, consumed_bits: int = 0) -> jax.Array:
+    """Local bucket ids in [0, 2k) for ``keys`` (any shape) — elementwise.
+
+    ``2 * ((key >> shift) & (k-1)) + (key == sentinel)``; batched and
+    segmented callers use the same function (the shift is data-independent,
+    so there is no per-row or per-segment state to thread).
+    """
+    shift = radix_shift(keys.dtype, k, consumed_bits)
+    j = jnp.bitwise_and(
+        jnp.right_shift(keys, jnp.asarray(shift, keys.dtype)),
+        jnp.asarray(k - 1, keys.dtype),
+    ).astype(jnp.int32)
+    eq = (keys == sentinel_for(keys.dtype)).astype(jnp.int32)
+    return 2 * j + eq

@@ -1,0 +1,158 @@
+"""The racing router: which classifier engine should "auto" run?
+
+The honest answer is empirical — the radix extractor wins on uniform-ish
+keyspaces, the tree wins under heavy duplication (its equality buckets
+absorb what would overflow a radix bucket), the learned CDF wins on
+smoothly skewed continuous inputs — so the router *measures* instead of
+guessing, the same learn-and-route pattern an inference stack uses to
+pick kernels per shape:
+
+  * ``distribution_moments`` reduces a host-visible key array to a coarse
+    distribution label ("uniform" | "dup" | "sorted" | "skew") from three
+    cheap sample moments: duplicate fraction, sortedness, and top-bits
+    histogram imbalance (the radix engine's own view of the keys);
+  * the plan cache races tree vs radix vs learned on a synthetic draw
+    matching that label and persists the winner under a ``clf:`` key
+    (``PlanCache.classifier_plan`` — DESIGN.md §9);
+  * ``resolve_classifier`` is the jit-boundary half: it maps "auto" to a
+    persisted winner for this (n, dtype[, batch]) — or "tree", the always-
+    correct default — *without* looking at the data, because the entry
+    points are jit-compatible and data moments are host-only.  The
+    moments-aware path is the eager ``classifier_for(x)`` convenience.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CLASSIFIERS",
+    "resolve_classifier",
+    "distribution_moments",
+    "classifier_for",
+]
+
+CLASSIFIERS = ("tree", "radix", "learned")
+
+# moments thresholds for the coarse label (see distribution_moments)
+_DUP_FRACTION = 0.5      # > half the sample is a repeat -> "dup"
+_SORTEDNESS = 0.95       # >= 95% nondecreasing adjacent pairs -> "sorted"
+_TOPBITS_IMBALANCE = 4.0  # heaviest of 16 top-bit bins vs uniform -> "skew"
+
+
+def resolve_classifier(
+    classifier: str,
+    n: Optional[int] = None,
+    dtype=None,
+    batch: Optional[int] = None,
+) -> str:
+    """Concrete engine for ``SortConfig.classifier``.
+
+    A named engine passes through; "auto" consults the plan cache's raced
+    ``clf:`` winners for this shape (``PlanCache.classifier_hint``) and
+    defaults to "tree" — the only engine that is never the wrong answer —
+    when nothing has been raced yet.
+
+    >>> resolve_classifier("radix")
+    'radix'
+    >>> resolve_classifier("auto")  # nothing raced: the safe default
+    'tree'
+    """
+    if classifier in CLASSIFIERS:
+        return classifier
+    if classifier != "auto":
+        raise ValueError(
+            f"unknown classifier {classifier!r}; expected one of "
+            f"{CLASSIFIERS + ('auto',)}"
+        )
+    if dtype is not None and n is not None:
+        from repro.ops.plan import default_cache  # lazy: ops layers on classify
+
+        hint = default_cache.classifier_hint(n, dtype, batch=batch)
+        if hint is not None:
+            return hint
+    return "tree"
+
+
+def distribution_moments(x, sample: int = 4096, seed: int = 0) -> str:
+    """Coarse distribution label of a host-visible key array.
+
+    Three moments on a bounded sample (host-side numpy — this is NOT
+    jit-compatible, by design):
+
+      * duplicate fraction -> "dup": the tree's equality buckets are the
+        only engine feature that absorbs heavy repeats;
+      * adjacent sortedness -> "sorted": near-sorted inputs make sampled
+        splitters near-perfect and radix gains nothing;
+      * top-4-bits histogram imbalance -> "skew": exactly the load the
+        radix extractor would see at its first level, so a lopsided
+        histogram predicts radix bucket overflow.
+
+    Anything unremarkable is "uniform" — radix territory.
+    """
+    flat = np.asarray(jax.device_get(x)).reshape(-1)
+    if flat.size == 0:
+        return "uniform"
+    # sortedness wants *adjacent* pairs: measure it on a contiguous prefix
+    # (a random subsample would shuffle away exactly the signal)
+    prefix = flat[:sample]
+    xs = (
+        np.random.default_rng(seed).choice(flat, size=sample, replace=False)
+        if flat.size > sample
+        else flat
+    )
+    dup = 1.0 - np.unique(xs).size / xs.size
+    if dup > _DUP_FRACTION:
+        return "dup"
+    sortedness = (
+        float(np.mean(prefix[1:] >= prefix[:-1])) if prefix.size > 1 else 1.0
+    )
+    if sortedness >= _SORTEDNESS:
+        return "sorted"
+    # top-bits view: rank-normalise into 16 equal-width value bins between
+    # the sample extremes (rank spacing of the extremes approximates the
+    # encoded top-bit histogram without needing the encode here)
+    lo, hi = np.min(xs), np.max(xs)
+    if hi > lo:
+        bins = np.clip(
+            ((xs.astype(np.float64) - np.float64(lo))
+             / (np.float64(hi) - np.float64(lo)) * 16).astype(np.int64),
+            0, 15,
+        )
+        counts = np.bincount(bins, minlength=16)
+        if counts.max() * 16 / xs.size > _TOPBITS_IMBALANCE:
+            return "skew"
+    return "uniform"
+
+
+def classifier_for(
+    x,
+    *,
+    batch: Optional[int] = None,
+    tune: bool = True,
+    cache=None,
+) -> str:
+    """Eager, data-aware routing: label ``x``'s distribution, race (or look
+    up) the engines for (n, dtype, label), return the winner.
+
+    This is the host-side companion to ``SortConfig(classifier="auto")``:
+    call it once per recurring workload shape, then pass the returned
+    engine (or just keep using "auto" — the race it triggers is persisted
+    and feeds ``resolve_classifier`` from then on).  A fresh race here
+    times the engines on ``x`` itself (not the label's synthetic draw) —
+    the one path that holds real data is the one place the measurement
+    can be exact.
+    """
+    if cache is None:
+        from repro.ops.plan import default_cache as cache  # lazy
+    arr = jnp.asarray(x)
+    n = arr.shape[-1]
+    b = arr.shape[0] if arr.ndim == 2 else batch
+    label = distribution_moments(arr)
+    winner = cache.classifier_plan(
+        n, arr.dtype, dist=label, batch=b, tune=tune, x=arr
+    )
+    return winner or "tree"

@@ -35,6 +35,15 @@ partition) or "pallas" (the fused classify+histogram kernel and the
 counting-rank placement kernel — the paper's §4.1/§4.2 loops as real
 kernels); "auto" lets the plan cache / backend pick.  Both engines are
 bit-exact interchangeable (DESIGN.md §4.8).
+
+Orthogonally, ``SortConfig.classifier`` picks the bucket-id function each
+level pass uses (``repro.classify``, DESIGN.md §9): "tree" (the paper's
+sampled comparison tree), "radix" (IPS2Ra bit extraction — no sampling
+pass; level 2 shifts past the level-1 bits), "learned" (piecewise-linear
+CDF model with an imbalance fallback to the tree), or "auto" (the plan
+cache races them).  All engines honour the same contract — monotone local
+ids in [0, 2k) with odd ids as equality buckets — so the partition, the
+base case, and the robustness fallback are untouched by the choice.
 """
 from __future__ import annotations
 
@@ -46,8 +55,16 @@ from typing import Any, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.classify import (
+    classify,
+    classify_batched,
+    classify_segmented,
+    learned_bucket_ids,
+    learned_bucket_ids_batched,
+    radix_bucket_ids,
+    resolve_classifier,
+)
 from repro.core import sampling
-from repro.core.classifier import classify, classify_batched, classify_segmented
 from repro.core.partition import ENGINES, batched_stable_partition, stable_partition
 from repro.kernels import resolve_interpret
 
@@ -92,6 +109,8 @@ class SortConfig:
     seed: int = 0xC0FFEE
     fallback: bool = True          # robustness fallback via lax.cond
     engine: str = "xla"            # partition engine: "xla" | "pallas" | "auto"
+    classifier: str = "tree"       # "tree" | "radix" | "learned" | "auto" (§9)
+    classify_rows: int = 0         # fused-kernel tile rows; 0 = roofline-derived
 
 
 def plan_levels(n: int, cfg: SortConfig) -> List[int]:
@@ -146,13 +165,17 @@ def resolve_engine(cfg: SortConfig, n: int, dtype=None, batch: Optional[int] = N
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
-def _classify_rows(n: int) -> int:
-    """Largest kernel row count whose tile (rows*128) divides n, or 0 if
-    n is not 128-aligned (caller then stays on the XLA classifier)."""
-    for rows in (32, 16, 8, 4, 2, 1):
-        if n % (rows * 128) == 0:
-            return rows
-    return 0
+def _classify_rows(n: int, cfg: SortConfig, dtype, k: int) -> int:
+    """Fused-kernel tile rows for this level, or 0 if n is not 128-aligned
+    (the caller then stays on the XLA classifier).  ``cfg.classify_rows``
+    pins a swept value (the plan-cache autotune dimension); 0 derives the
+    largest candidate from the VMEM roofline model
+    (``launch.roofline.classify_tile_rows`` via ``kernels.classify``)."""
+    from repro.kernels.classify import default_rows
+
+    if cfg.classify_rows:
+        return cfg.classify_rows if n % (cfg.classify_rows * 128) == 0 else 0
+    return default_rows(n, jnp.dtype(dtype).itemsize, k)
 
 
 def segment_ids(offsets: jax.Array, n: int) -> jax.Array:
@@ -236,11 +259,23 @@ def pad_with_sentinel(arrays: Any, unit: int) -> Any:
 
 
 def level_pass(
-    arrays: Any, n_real: int, k: int, cfg: SortConfig, rng: jax.Array
+    arrays: Any,
+    n_real: int,
+    k: int,
+    cfg: SortConfig,
+    rng: jax.Array,
+    consumed_bits: int = 0,
 ) -> Tuple[Any, jax.Array, int, int]:
     """One *global* level pass: sample -> branchless classify -> stable
     block partition.  Pads (positions >= n_real) go to a dedicated final
     bucket.  Returns (arrays, offsets, nb, pad_bucket) with nb = 2k + 1.
+
+    The classifier engine comes from ``cfg.classifier`` (DESIGN.md §9):
+    "tree" samples splitters, "radix" extracts the next log2(k) key bits
+    (skipping ``consumed_bits`` fixed by earlier radix levels — no sample
+    at all), "learned" fits a CDF on the sample with a measured-imbalance
+    ``lax.cond`` fallback to the tree; "auto" at this depth means "tree"
+    (the plan-cache routing happens at the ``repro.ops`` boundary).
 
     On the "pallas" engine the classify+histogram and the rank placement
     run as the fused kernels (``kernels.classify``,
@@ -249,24 +284,44 @@ def level_pass(
     """
     keys = arrays["k"]
     n = keys.shape[0]
-    m1 = min(max(sampling.oversampling_factor(n_real) * k, k), cfg.max_sample, n_real)
-    sample_pos = jax.random.randint(rng, (m1,), 0, n_real)
-    sample = jnp.sort(jnp.take(keys, sample_pos, axis=0))
-    spl = sampling.select_splitters(sample, k)
+    clf = resolve_classifier(cfg.classifier)
 
     nb = 2 * k + 1  # +1: dedicated pad bucket (the overflow-block analogue)
     pad_n = n - n_real
     engine = resolve_engine(cfg, n, keys.dtype)
-    # the fused classify kernel needs a 128-aligned n; the counting-rank
-    # partition self-pads, so a pallas engine keeps its partition either way
-    rows = _classify_rows(n) if engine == "pallas" else 0
+    # the fused classify kernels need a 128-aligned n (tree and radix have
+    # fused forms; learned classifies on XLA); the counting-rank partition
+    # self-pads, so a pallas engine keeps its partition either way
+    rows = (
+        _classify_rows(n, cfg, keys.dtype, k)
+        if engine == "pallas" and clf in ("tree", "radix")
+        else 0
+    )
     interpret = resolve_interpret()
+
+    if clf != "radix":
+        m1 = min(
+            max(sampling.oversampling_factor(n_real) * k, k), cfg.max_sample, n_real
+        )
+        sample_pos = jax.random.randint(rng, (m1,), 0, n_real)
+        sample = jnp.sort(jnp.take(keys, sample_pos, axis=0))
+        spl = sampling.select_splitters(sample, k)
 
     off = None
     if rows:
-        from repro.kernels.classify import classify_histogram
+        if clf == "radix":
+            from repro.kernels.classify import radix_histogram
 
-        b, hist = classify_histogram(keys, spl, k=k, rows=rows, interpret=interpret)
+            b, hist = radix_histogram(
+                keys, k=k, consumed_bits=consumed_bits, rows=rows,
+                interpret=interpret,
+            )
+        else:
+            from repro.kernels.classify import classify_histogram
+
+            b, hist = classify_histogram(
+                keys, spl, k=k, rows=rows, interpret=interpret
+            )
         # Bucket offsets come from the fused per-tile histogram.  Pads are
         # all sentinel keys, so the kernel put every one of them in a single
         # bucket — read it off the first pad position and move the count to
@@ -278,6 +333,10 @@ def level_pass(
             [totals, jnp.full((1,), pad_n, jnp.int32)]
         ).astype(jnp.int32)
         off = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(totals)])
+    elif clf == "radix":
+        b = radix_bucket_ids(keys, k, consumed_bits)
+    elif clf == "learned":
+        b, _ = learned_bucket_ids(keys, sample, spl, k)
     else:
         b = classify(keys, spl, k)
     if pad_n:
@@ -299,6 +358,8 @@ def segmented_level_pass(
     cfg: SortConfig,
     rng: jax.Array,
     sample_cap: int = 2048,
+    classifier: str = "tree",
+    consumed_bits: int = 0,
 ) -> Tuple[Any, jax.Array, int]:
     """One *segmented* level pass: per-segment splitters, flattened
     classification, composite-bucket partition.  This is recursion level 2
@@ -308,22 +369,37 @@ def segmented_level_pass(
     index ranges (the composite id is monotone in segment and the partition
     is stable).  Returns (arrays, offsets, nb) with nb = num_seg * 2k.
 
+    ``classifier`` accepts "tree" (per-segment sampled splitters) or
+    "radix" (the shared per-level shift extractor — valid ONLY when the
+    segments are radix-aligned key ranges, i.e. when level 1 was a radix
+    level too, which is why ``partition_passes`` is the only caller that
+    passes it; the "learned" engine has no per-segment form and maps to
+    "tree" one layer up).
+
     Classification stays on the XLA path (the composite-bucket classifier
-    has no fused kernel yet); the *partition* honours ``cfg.engine`` as
-    long as nb fits the counting kernel's VMEM one-hot (past
-    ``_PALLAS_NB_MAX`` composite buckets it drops back to "xla").
+    has no fused kernel; the radix extractor is one shift + mask, already
+    as cheap as a kernel); the *partition* honours ``cfg.engine`` as long
+    as nb fits the counting kernel's VMEM one-hot (past ``_PALLAS_NB_MAX``
+    composite buckets it drops back to "xla").
     """
     keys = arrays["k"]
     n = keys.shape[0]
     seg = segment_ids(seg_offsets, n)
-    m = min(max(sampling.oversampling_factor(n_real) * k, k), sample_cap)
-    seg_rngs = jax.random.split(rng, num_seg)
-    pos = jax.vmap(lambda r, lo, hi: sampling.sample_indices(r, m, lo, hi))(
-        seg_rngs, seg_offsets[:-1], seg_offsets[1:]
-    )
-    svals = jnp.sort(jnp.take(keys, pos.reshape(-1), axis=0).reshape(num_seg, m), axis=-1)
-    spl = sampling.select_splitters(svals, k)  # (num_seg, k-1)
-    local = classify_segmented(keys, seg, spl, k)
+    if classifier == "radix":
+        # no sampling pass: within a radix-aligned segment the next
+        # log2(k) bits are monotone, and the shift is segment-independent
+        local = radix_bucket_ids(keys, k, consumed_bits)
+    else:
+        m = min(max(sampling.oversampling_factor(n_real) * k, k), sample_cap)
+        seg_rngs = jax.random.split(rng, num_seg)
+        pos = jax.vmap(lambda r, lo, hi: sampling.sample_indices(r, m, lo, hi))(
+            seg_rngs, seg_offsets[:-1], seg_offsets[1:]
+        )
+        svals = jnp.sort(
+            jnp.take(keys, pos.reshape(-1), axis=0).reshape(num_seg, m), axis=-1
+        )
+        spl = sampling.select_splitters(svals, k)  # (num_seg, k-1)
+        local = classify_segmented(keys, seg, spl, k)
     comp = seg * (2 * k) + local
     nb = num_seg * 2 * k
     engine = resolve_engine(cfg, n, keys.dtype)
@@ -344,14 +420,24 @@ def partition_passes(
     contiguous, buckets are in key order, odd ids are equality buckets, and
     pads are at the tail (in ``pad_bucket`` after one level, in an odd
     sentinel-equality bucket after two).
+
+    Classifier threading: level 1 takes ``cfg.classifier`` as resolved by
+    ``level_pass``; level 2 reuses "radix" only when level 1 was radix (the
+    segments are then bit-aligned key ranges and the next log2(k2) bits
+    stay monotone per segment, with ``consumed_bits = log2(k1)``) and maps
+    "learned" back to "tree" (the CDF model is global; per-segment refits
+    would cost more than the per-segment tree they'd replace).
     """
+    clf = resolve_classifier(cfg.classifier)
     rng = jax.random.PRNGKey(cfg.seed)
     r1, r2 = jax.random.split(rng)
     arrays, off1, nb1, pad_bucket = level_pass(arrays, n_real, levels[0], cfg, r1)
     if len(levels) == 1:
         return arrays, off1, nb1, pad_bucket
     arrays, offsets, nb = segmented_level_pass(
-        arrays, off1, nb1, n_real, levels[1], cfg, r2
+        arrays, off1, nb1, n_real, levels[1], cfg, r2,
+        classifier="radix" if clf == "radix" else "tree",
+        consumed_bits=int(math.log2(levels[0])),
     )
     return arrays, offsets, nb, None  # pads now sit in an odd equality bucket
 
@@ -509,28 +595,51 @@ def batched_level_pass(
     Returns (arrays, offsets (B, nb+1), nb, pad_bucket) with nb = 2k + 1.
     On the "pallas" engine the classify+histogram and the rank placement
     run as the batch-grid kernels (one launch each for all B rows).
+
+    Classifier dispatch mirrors ``level_pass``: "radix" skips the per-row
+    sampling entirely (the shift mask is row-independent), "learned" fits
+    one CDF model per row and falls back batch-wide to the per-row trees
+    when any row's measured imbalance trips the threshold, "auto" at this
+    depth means "tree" (the data-aware router is eager-side).
     """
     keys = arrays["k"]
     B, n = keys.shape
-    m1 = min(max(sampling.oversampling_factor(n_real) * k, k), cfg.max_sample, n_real)
-    row_rngs = jax.random.split(rng, B)
-    sample_pos = jax.vmap(lambda r: jax.random.randint(r, (m1,), 0, n_real))(row_rngs)
-    sample = jnp.sort(jnp.take_along_axis(keys, sample_pos, axis=1), axis=1)
-    spl = sampling.select_splitters(sample, k)  # (B, k-1) per-row splitters
-
+    clf = resolve_classifier(cfg.classifier)
     nb = 2 * k + 1  # +1: dedicated pad bucket per row
     pad_n = n - n_real
     engine = resolve_engine(cfg, n, keys.dtype)
-    rows = _classify_rows(n) if engine == "pallas" else 0
+    rows = (
+        _classify_rows(n, cfg, keys.dtype, k)
+        if engine == "pallas" and clf in ("tree", "radix")
+        else 0
+    )
     interpret = resolve_interpret()
+
+    if clf != "radix":
+        m1 = min(
+            max(sampling.oversampling_factor(n_real) * k, k), cfg.max_sample, n_real
+        )
+        row_rngs = jax.random.split(rng, B)
+        sample_pos = jax.vmap(lambda r: jax.random.randint(r, (m1,), 0, n_real))(
+            row_rngs
+        )
+        sample = jnp.sort(jnp.take_along_axis(keys, sample_pos, axis=1), axis=1)
+        spl = sampling.select_splitters(sample, k)  # (B, k-1) per-row splitters
 
     off = None
     if rows:
-        from repro.kernels.classify import classify_histogram_batched
+        if clf == "radix":
+            from repro.kernels.classify import radix_histogram_batched
 
-        b, hist = classify_histogram_batched(
-            keys, spl, k=k, rows=rows, interpret=interpret
-        )
+            b, hist = radix_histogram_batched(
+                keys, k=k, rows=rows, interpret=interpret
+            )
+        else:
+            from repro.kernels.classify import classify_histogram_batched
+
+            b, hist = classify_histogram_batched(
+                keys, spl, k=k, rows=rows, interpret=interpret
+            )
         totals = hist.sum(axis=1)  # (B, 2k)
         if pad_n:
             # each row's pads are all sentinel keys in one bucket — read it
@@ -542,6 +651,10 @@ def batched_level_pass(
         off = jnp.concatenate(
             [jnp.zeros((B, 1), jnp.int32), jnp.cumsum(totals, axis=1)], axis=1
         )
+    elif clf == "radix":
+        b = radix_bucket_ids(keys, k)
+    elif clf == "learned":
+        b, _ = learned_bucket_ids_batched(keys, sample, spl, k)
     else:
         b = classify_batched(keys, spl, k)
     if pad_n:
@@ -563,6 +676,8 @@ def batched_segmented_level_pass(
     cfg: SortConfig,
     rng: jax.Array,
     sample_cap: int = 2048,
+    classifier: str = "tree",
+    consumed_bits: int = 0,
 ) -> Tuple[Any, jax.Array, int]:
     """Recursion level 2 per row: per-(row, segment) splitters, flattened
     classification, per-row composite-bucket partition.
@@ -571,27 +686,35 @@ def batched_segmented_level_pass(
     composite id ``seg * 2k + local`` stays row-local, so the partition is
     the per-row one (nb = num_seg * 2k buckets per row) — rows still never
     exchange elements.
+
+    ``classifier`` accepts "tree" or "radix" under the same contract as the
+    1-D ``segmented_level_pass``: radix is only valid when level 1 was
+    radix (bit-aligned segments), and it skips the per-(row, segment)
+    sampling entirely.
     """
     keys = arrays["k"]
     B, n = keys.shape
     seg = batched_segment_ids(seg_offsets, n)  # (B, n)
-    m = min(max(sampling.oversampling_factor(n_real) * k, k), sample_cap)
-    seg_rngs = jax.random.split(rng, B * num_seg).reshape(B, num_seg, -1)
-    pos = jax.vmap(
-        jax.vmap(lambda r, lo, hi: sampling.sample_indices(r, m, lo, hi))
-    )(seg_rngs, seg_offsets[:, :-1], seg_offsets[:, 1:])  # (B, num_seg, m)
-    svals = jnp.sort(
-        jnp.take_along_axis(keys, pos.reshape(B, num_seg * m), axis=1).reshape(
-            B, num_seg, m
-        ),
-        axis=-1,
-    )
-    spl = sampling.select_splitters(svals, k)  # (B, num_seg, k-1)
-    # flatten (row, segment) -> global segment for the shared classifier
-    gseg = (seg + num_seg * jnp.arange(B, dtype=jnp.int32)[:, None]).reshape(B * n)
-    local = classify_segmented(
-        keys.reshape(B * n), gseg, spl.reshape(B * num_seg, k - 1), k
-    ).reshape(B, n)
+    if classifier == "radix":
+        local = radix_bucket_ids(keys, k, consumed_bits)
+    else:
+        m = min(max(sampling.oversampling_factor(n_real) * k, k), sample_cap)
+        seg_rngs = jax.random.split(rng, B * num_seg).reshape(B, num_seg, -1)
+        pos = jax.vmap(
+            jax.vmap(lambda r, lo, hi: sampling.sample_indices(r, m, lo, hi))
+        )(seg_rngs, seg_offsets[:, :-1], seg_offsets[:, 1:])  # (B, num_seg, m)
+        svals = jnp.sort(
+            jnp.take_along_axis(keys, pos.reshape(B, num_seg * m), axis=1).reshape(
+                B, num_seg, m
+            ),
+            axis=-1,
+        )
+        spl = sampling.select_splitters(svals, k)  # (B, num_seg, k-1)
+        # flatten (row, segment) -> global segment for the shared classifier
+        gseg = (seg + num_seg * jnp.arange(B, dtype=jnp.int32)[:, None]).reshape(B * n)
+        local = classify_segmented(
+            keys.reshape(B * n), gseg, spl.reshape(B * num_seg, k - 1), k
+        ).reshape(B, n)
     comp = seg * (2 * k) + local  # row-local composite bucket
     nb = num_seg * 2 * k
     engine = resolve_engine(cfg, n, keys.dtype)
@@ -610,8 +733,11 @@ def batched_partition_passes(
 
     Returns (arrays, offsets (B, nb+1), nb, pad_bucket); per row, buckets
     are contiguous and in key order, odd local ids are equality buckets,
-    pads sit at the row tail.
+    pads sit at the row tail.  Classifier threading matches the 1-D
+    ``partition_passes``: radix carries to level 2 with the consumed-bit
+    shift, learned maps back to tree there.
     """
+    clf = resolve_classifier(cfg.classifier)
     rng = jax.random.PRNGKey(cfg.seed)
     r1, r2 = jax.random.split(rng)
     arrays, off1, nb1, pad_bucket = batched_level_pass(
@@ -620,7 +746,9 @@ def batched_partition_passes(
     if len(levels) == 1:
         return arrays, off1, nb1, pad_bucket
     arrays, offsets, nb = batched_segmented_level_pass(
-        arrays, off1, nb1, n_real, levels[1], cfg, r2
+        arrays, off1, nb1, n_real, levels[1], cfg, r2,
+        classifier="radix" if clf == "radix" else "tree",
+        consumed_bits=int(math.log2(levels[0])),
     )
     return arrays, offsets, nb, None  # pads now sit in odd equality buckets
 

@@ -96,7 +96,9 @@ def partition_permutation(
     bt = bucket.reshape(num_tiles, tile)
 
     # Local classification: stable grouping within each tile.
-    order = jnp.argsort(bt, axis=1, stable=True)  # (T, tile)
+    # int32 keeps the scatter below typed against its int32 zeros operand
+    # when x64 is enabled (argsort then returns int64 indices)
+    order = jnp.argsort(bt, axis=1, stable=True).astype(jnp.int32)  # (T, tile)
     bt_g = jnp.take_along_axis(bt, order, axis=1)
 
     # Prefix sums (paper: over stripes).

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.classify import resolve_classifier
 from repro.core.ips4o import SortConfig, ips4o_sort, resolve_engine
 from repro.dist.exchange import compact_valid, exchange_level, tile_for
 from repro.dist.levels import AxisNames, normalize_axes, plan_schedule
@@ -102,7 +103,7 @@ def _finish_local(arrays, m, cfg: SortConfig, engine: str):
 
 def _sort_body(
     arrays, n_local: int, names: Tuple[str, ...], schedule, cfg: SortConfig,
-    engine: str, retries: int, d: int,
+    engine: str, retries: int, d: int, classifier: str = "tree",
 ):
     """Per-shard body: balanced pre-exchange, the explicit level loop, and
     the local finish.  Runs under ``shard_map``."""
@@ -126,10 +127,13 @@ def _sort_body(
     m = jnp.asarray(n_local, jnp.int32)
     overflow = jnp.asarray(False)
     for i, level in enumerate(schedule):
+        # radix destinations only at level 0: deeper domains hold
+        # splitter-delimited ranges once any round re-split
         arrays, m, ovf = exchange_level(
             arrays, m, level,
             engine=engine, tile=cfg.tile, seed=cfg.seed,
             level_idx=i, retries=retries,
+            classifier=classifier if i == 0 else "tree",
         )
         overflow = jnp.logical_or(overflow, ovf)
     out = _finish_local(arrays, m, cfg, engine)
@@ -167,6 +171,7 @@ def sort(
     retries: int = 2,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
     tune: bool = False,
 ):
     """Multi-level distributed sort of a globally sharded key array.
@@ -183,6 +188,12 @@ def sort(
         runs the capacity simulation and persists the winner).
       retries: bounded re-split rounds per level before the overflow flag.
       engine: "xla" | "pallas" | "auto" partition engine override.
+      classifier: "tree" | "radix" | "learned" | "auto" classifier-engine
+        override (DESIGN.md §9), resolved here against (n_local, dtype).
+        "radix" additionally takes bit-range destinations at round 0 of
+        level 0, skipping that round's sampling collective; exchange
+        levels past the first (and every re-split round) stay
+        splitter-based.
 
     Returns (sorted, counts, overflow) — with values,
     (sorted, sorted_values, counts, overflow): shard i of ``sorted`` holds
@@ -195,13 +206,14 @@ def sort(
         n_local, d, keys.dtype, slack, oversample, tune
     )
     eng = _resolve_dist_engine(engine, cfg, plan_engine, n_local, keys.dtype)
-    cfg_run = replace(cfg, engine=eng)
+    clf = resolve_classifier(classifier or cfg.classifier, n_local, keys.dtype)
+    cfg_run = replace(cfg, engine=eng, classifier=clf)
     schedule = plan_schedule(
         dict(mesh.shape), names, n_local, slack=slack, oversample=oversample
     )
     body = functools.partial(
         _sort_body, n_local=n_local, names=names, schedule=schedule,
-        cfg=cfg_run, engine=eng, retries=retries, d=d,
+        cfg=cfg_run, engine=eng, retries=retries, d=d, classifier=clf,
     )
     ax = _axis_arg(names)
     spec = P(ax)
@@ -242,6 +254,7 @@ def argsort(
     retries: int = 2,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
     tune: bool = False,
 ):
     """Distributed argsort: global input positions ride as the payload.
@@ -255,13 +268,14 @@ def argsort(
         n_local, d, keys.dtype, slack, oversample, tune
     )
     eng = _resolve_dist_engine(engine, cfg, plan_engine, n_local, keys.dtype)
-    cfg_run = replace(cfg, engine=eng)
+    clf = resolve_classifier(classifier or cfg.classifier, n_local, keys.dtype)
+    cfg_run = replace(cfg, engine=eng, classifier=clf)
     schedule = plan_schedule(
         dict(mesh.shape), names, n_local, slack=slack, oversample=oversample
     )
     body = functools.partial(
         _sort_body, n_local=n_local, names=names, schedule=schedule,
-        cfg=cfg_run, engine=eng, retries=retries, d=d,
+        cfg=cfg_run, engine=eng, retries=retries, d=d, classifier=clf,
     )
     ax = _axis_arg(names)
     spec = P(ax)
@@ -285,6 +299,7 @@ def bottomk(
     *,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """The k globally smallest keys (ascending) with their global indices.
 
@@ -295,7 +310,10 @@ def bottomk(
     Results are replicated (same on every shard), NaN-safe like
     ``ops.bottomk``.
     """
-    return _rank_k(keys, k, mesh, axes, cfg=cfg, engine=engine, largest=False)
+    return _rank_k(
+        keys, k, mesh, axes, cfg=cfg, engine=engine, classifier=classifier,
+        largest=False,
+    )
 
 
 def topk(
@@ -306,16 +324,21 @@ def topk(
     *,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """The k globally largest keys (descending) with their global indices;
     ``bottomk`` of the complemented keyspace codes (``~u`` reverses the
     total order), like ``ops.topk``."""
-    return _rank_k(keys, k, mesh, axes, cfg=cfg, engine=engine, largest=True)
+    return _rank_k(
+        keys, k, mesh, axes, cfg=cfg, engine=engine, classifier=classifier,
+        largest=True,
+    )
 
 
 def _rank_k(
     keys: jax.Array, k: int, mesh: Mesh, axes: AxisNames,
     *, cfg: SortConfig, engine: Optional[str], largest: bool,
+    classifier: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     names, d, n_local = _prepare(keys, mesh, axes, pre_exchange=False)
     n = keys.shape[0]
@@ -325,10 +348,13 @@ def _rank_k(
     if d == 1:
         from repro.ops.topk import bottomk as _bk, topk as _tk
 
-        return (_tk if largest else _bk)(keys, kk, cfg=cfg, engine=engine)
+        return (_tk if largest else _bk)(
+            keys, kk, cfg=cfg, engine=engine, classifier=classifier
+        )
 
     eng = _resolve_dist_engine(engine, cfg, None, n_local, keys.dtype)
-    cfg_run = replace(cfg, engine=eng)
+    clf = resolve_classifier(classifier or cfg.classifier, n_local, keys.dtype)
+    cfg_run = replace(cfg, engine=eng, classifier=clf)
     ax = _axis_arg(names)
     k_local = min(kk, n_local)
     enc = keyspace.encode(keys)
@@ -365,6 +391,7 @@ def group_by(
     retries: int = 2,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ):
     """Sharded grouping: multi-level sort by key, then per-shard run starts.
 
@@ -376,7 +403,7 @@ def group_by(
     """
     res = sort(
         keys, mesh, axes, values=values, slack=slack, retries=retries,
-        cfg=cfg, engine=engine,
+        cfg=cfg, engine=engine, classifier=classifier,
     )
     if values is None:
         out_k, counts, ovf = res

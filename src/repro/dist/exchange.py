@@ -29,6 +29,17 @@ balanced ranks.  Rounds are a statically unrolled, bounded loop (the
 recursion-free discipline of ``core/ips4o.py``); only if every round
 overflows does the exchange truncate deterministically and raise the
 overflow flag — the last resort, no longer the first response.
+
+**Radix destinations** (``classifier="radix"``, DESIGN.md §9): when the
+level's group count is a power of two and the keys are keyspace-encoded
+(unsigned), round 0 can skip the sampling collective entirely and send
+each element to group ``key >> (bits - log2 g)`` — the distributed form
+of the IPS2Ra level-0 bucket.  Skewed keyspaces that overflow a bit-range
+land in the existing re-split rounds, which are always splitter-based
+(observed-histogram splitters are what fixes skew; re-deriving bit ranges
+could not), so the radix path costs nothing in robustness.  Callers only
+pass it for level 0: deeper levels' domains hold splitter-delimited (not
+bit-aligned) ranges whenever any earlier round re-split.
 """
 from __future__ import annotations
 
@@ -87,6 +98,20 @@ def _classify(
     return dest, counts
 
 
+def _radix_dest(
+    keys: jax.Array, valid: jax.Array, groups: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Destination group from the top log2(groups) bits of the encoded key
+    (pads -> trash bucket ``groups``) and per-group counts.  Requires an
+    unsigned (keyspace-encoded) dtype and a power-of-two ``groups`` —
+    monotone in the key, so the level's range invariant holds."""
+    shift = keys.dtype.itemsize * 8 - int(math.log2(groups))
+    dest = jnp.right_shift(keys, jnp.asarray(shift, keys.dtype)).astype(jnp.int32)
+    dest = jnp.where(valid, dest, groups)
+    counts = jnp.bincount(dest, length=groups + 1)[:groups]
+    return dest, counts
+
+
 def _observed_cumulative(
     keys: jax.Array, valid: jax.Array, cands: jax.Array, domain
 ) -> jax.Array:
@@ -114,6 +139,7 @@ def exchange_level(
     seed: int,
     level_idx: int,
     retries: int = 2,
+    classifier: str = "tree",
 ) -> Tuple[Pytree, jax.Array, jax.Array]:
     """Run one level's exchange on this shard's ``arrays`` dict.
 
@@ -123,6 +149,12 @@ def exchange_level(
     (arrays (n_out,), m', overflowed) — ``overflowed`` is True only when
     every re-split round still exceeded capacity somewhere in the domain
     (the exchange then truncated deterministically).
+
+    ``classifier="radix"`` takes the bit-range destination at round 0 (no
+    sampling collective — see the module docstring); it silently degrades
+    to the sampled-splitter path when the group count is not a power of
+    two or the keys are not unsigned.  Re-split rounds are always
+    splitter-based.
     """
     n = arrays["k"].shape[0]
     g, cap = level.groups, level.capacity
@@ -157,8 +189,29 @@ def exchange_level(
     spl = None
     dest_keep = jnp.zeros((n,), jnp.int32)
     done = jnp.asarray(False)
+    use_radix = (
+        classifier == "radix"
+        and g & (g - 1) == 0
+        and jnp.dtype(arrays["k"].dtype).kind == "u"
+    )
 
     for r in range(max(0, retries) + 1):
+        if r == 0 and use_radix:
+            # bit-range destinations, no sampling collective this round;
+            # spl is initialised to the implied bit boundaries so the
+            # re-split rounds' where(done, spl, new_spl) select is typed
+            # (its value is never used when round 0 succeeded)
+            kd = arrays["k"].dtype
+            shift = kd.itemsize * 8 - int(math.log2(g))
+            spl = jnp.left_shift(
+                jnp.arange(1, g, dtype=kd), jnp.asarray(shift, kd)
+            )
+            dest, counts = _radix_dest(arrays["k"], valid, g)
+            over_here = jnp.any(counts > cap)
+            over_r = jax.lax.pmax(over_here.astype(jnp.int32), level.domain) > 0
+            dest_keep = dest
+            done = ~over_r
+            continue
         rng = jax.random.fold_in(
             jax.random.fold_in(
                 jax.random.fold_in(jax.random.PRNGKey(seed), level_idx), r

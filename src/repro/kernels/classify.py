@@ -25,8 +25,16 @@ of maintaining buffer blocks") is fused into the same VMEM pass via a
 one-hot reduction.
 
 VMEM budget per grid step: tile keys (rows*128*4 B) + splitters (k*4 B) +
-one-hot reduction tile — e.g. rows=32, k=128: 16 KiB keys + compare
-broadcast, well within ~16 MiB VMEM.
+one-hot reduction tile.  The row count is not hard-coded: ``rows=None``
+derives it from the VMEM roofline model (``launch.roofline.
+classify_tile_rows`` — the largest power-of-two tile whose working set
+fits the budget, e.g. 32 rows at f32/k=128), and the plan cache sweeps
+the leading candidates (``SortConfig.classify_rows``).
+
+The radix form (``radix_histogram`` — the IPS2Ra extractor of DESIGN.md
+§9) replaces the dense compare with one shift + mask per element
+(``repro.classify.radix`` is the id contract); no splitter operand at
+all, same fused per-tile histogram.
 
 The batched variant (``classify_histogram_batched``, DESIGN.md §6) adds a
 *batch grid dimension*: grid = (B, num_tiles), each program classifying
@@ -44,12 +52,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.classify.radix import radix_bucket_ids
 from repro.core.sampling import sentinel_for
 from repro.kernels import resolve_interpret
 
-__all__ = ["classify_histogram", "classify_histogram_batched"]
+__all__ = [
+    "classify_histogram",
+    "classify_histogram_batched",
+    "radix_histogram",
+    "radix_histogram_batched",
+    "default_rows",
+]
 
 LANES = 128
+
+
+def default_rows(n: int, key_bytes: int, k: int) -> int:
+    """Largest roofline row candidate whose tile (rows*128) divides ``n``,
+    or 0 when n is not 128-aligned (callers then stay on the XLA path)."""
+    from repro.launch.roofline import classify_tile_rows
+
+    for rows in classify_tile_rows(key_bytes, k):
+        if n % (rows * LANES) == 0:
+            return rows
+    return 0
 
 
 def _kernel(keys_ref, spl_ref, bucket_ref, hist_ref, *, k: int, nb: int):
@@ -59,14 +85,16 @@ def _kernel(keys_ref, spl_ref, bucket_ref, hist_ref, *, k: int, nb: int):
     sf = spl[0][None, None, :]  # (1, 1, k)
     # j counts only the k-1 real splitters (a key above the sentinel, e.g.
     # +inf, must still land in bucket k-1); eq compares against all k uppers.
-    j = jnp.sum((kf > sf[..., : k - 1]).astype(jnp.int32), axis=-1)
+    # dtype= pins the accumulator: with x64 enabled (u64 keys) jnp.sum
+    # would otherwise widen int32 to int64 and mismatch the output refs
+    j = jnp.sum((kf > sf[..., : k - 1]).astype(jnp.int32), axis=-1, dtype=jnp.int32)
     eq = jnp.any(kf == sf, axis=-1).astype(jnp.int32)
     bucket = 2 * j + eq
     bucket_ref[...] = bucket
     # Fused per-tile histogram: one-hot reduce over the tile.
     ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nb), 2)
     onehot = (bucket[:, :, None] == ids).astype(jnp.int32)
-    hist_ref[...] = jnp.sum(onehot, axis=(0, 1))[None, :]
+    hist_ref[...] = jnp.sum(onehot, axis=(0, 1), dtype=jnp.int32)[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "rows", "interpret"))
@@ -75,19 +103,22 @@ def classify_histogram(
     splitters: jax.Array,
     *,
     k: int,
-    rows: int = 32,
+    rows: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Classify ``keys`` (n,) against ``splitters`` (k-1,).
 
     Returns (bucket ids (n,) int32 in [0, 2k), per-tile histogram
-    (num_tiles, 2k) int32).  n must be a multiple of rows*128.
+    (num_tiles, 2k) int32).  n must be a multiple of rows*128;
+    ``rows=None`` takes the largest roofline candidate dividing n.
     """
     interpret = resolve_interpret(interpret)
     n = keys.shape[0]
+    if rows is None:
+        rows = default_rows(n, keys.dtype.itemsize, k)
     tile = rows * LANES
-    if n % tile:
-        raise ValueError(f"n={n} must be a multiple of tile={tile}")
+    if not rows or n % tile:
+        raise ValueError(f"n={n} must be a multiple of a rows*{LANES} tile")
     num_tiles = n // tile
     nb = 2 * k
     keys2 = keys.reshape(num_tiles * rows, LANES)
@@ -125,7 +156,7 @@ def classify_histogram_batched(
     splitters: jax.Array,
     *,
     k: int,
-    rows: int = 32,
+    rows: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Classify ``keys`` (B, n) against per-row ``splitters`` (B, k-1).
@@ -133,13 +164,16 @@ def classify_histogram_batched(
     The batch-grid form of :func:`classify_histogram`: grid (B, num_tiles),
     row ``b``'s tiles compare against row ``b``'s splitter block.  Returns
     (bucket ids (B, n) int32 in [0, 2k), per-tile histograms
-    (B, num_tiles, 2k) int32).  n must be a multiple of rows*128.
+    (B, num_tiles, 2k) int32).  n must be a multiple of rows*128;
+    ``rows=None`` takes the largest roofline candidate dividing n.
     """
     interpret = resolve_interpret(interpret)
     B, n = keys.shape
+    if rows is None:
+        rows = default_rows(n, keys.dtype.itemsize, k)
     tile = rows * LANES
-    if n % tile:
-        raise ValueError(f"n={n} must be a multiple of tile={tile}")
+    if not rows or n % tile:
+        raise ValueError(f"n={n} must be a multiple of a rows*{LANES} tile")
     num_tiles = n // tile
     nb = 2 * k
     keys2 = keys.reshape(B * num_tiles * rows, LANES)
@@ -169,3 +203,96 @@ def classify_histogram_batched(
         interpret=interpret,
     )(keys2, upper)
     return bucket.reshape(B, n), hist.reshape(B, num_tiles, nb)
+
+
+def _radix_kernel(keys_ref, bucket_ref, hist_ref, *, k: int, nb: int, consumed: int):
+    # the extractor is elementwise (one shift + one mask — the IPS2Ra
+    # classifier), so the id computation is shared verbatim with the XLA
+    # engine: repro.classify.radix is the single source of truth
+    bucket = radix_bucket_ids(keys_ref[...], k, consumed)  # (rows, 128)
+    bucket_ref[...] = bucket
+    ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nb), 2)
+    onehot = (bucket[:, :, None] == ids).astype(jnp.int32)
+    # dtype= pins the x64-mode accumulator to the int32 output ref
+    hist_ref[...] = jnp.sum(onehot, axis=(0, 1), dtype=jnp.int32)[None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "consumed_bits", "rows", "interpret")
+)
+def radix_histogram(
+    keys: jax.Array,
+    *,
+    k: int,
+    consumed_bits: int = 0,
+    rows: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused radix extract + per-tile histogram over ``keys`` (n,).
+
+    The radix twin of :func:`classify_histogram` with no splitter operand:
+    bucket ``2 * ((key >> shift) & (k-1)) + (key == sentinel)`` where the
+    static shift skips ``consumed_bits`` already fixed by earlier levels
+    (``repro.classify.radix.radix_shift``).  Keys must be keyspace-encoded
+    (unsigned).  Returns (bucket ids (n,) int32 in [0, 2k), per-tile
+    histogram (num_tiles, 2k) int32); n must be a multiple of rows*128,
+    ``rows=None`` takes the largest roofline candidate dividing n.
+    """
+    interpret = resolve_interpret(interpret)
+    n = keys.shape[0]
+    if rows is None:
+        rows = default_rows(n, keys.dtype.itemsize, k)
+    tile = rows * LANES
+    if not rows or n % tile:
+        raise ValueError(f"n={n} must be a multiple of a rows*{LANES} tile")
+    num_tiles = n // tile
+    nb = 2 * k
+    keys2 = keys.reshape(num_tiles * rows, LANES)
+
+    bucket, hist = pl.pallas_call(
+        functools.partial(_radix_kernel, k=k, nb=nb, consumed=consumed_bits),
+        grid=(num_tiles,),
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, nb), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_tiles * rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles, nb), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys2)
+    return bucket.reshape(n), hist
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "consumed_bits", "rows", "interpret")
+)
+def radix_histogram_batched(
+    keys: jax.Array,
+    *,
+    k: int,
+    consumed_bits: int = 0,
+    rows: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-row fused radix extract + histogram over ``keys`` (B, n).
+
+    The extractor has no per-row state (the shift is data-independent, so
+    every row uses the same one — nothing like the per-row splitter blocks
+    of :func:`classify_histogram_batched` is needed): the rows concatenate
+    into one longer unbatched launch and the tile histograms reshape back.
+    Returns (bucket ids (B, n), per-tile histograms (B, n/tile, 2k));
+    n must be a multiple of rows*128 so tiles never straddle rows.
+    """
+    B, n = keys.shape
+    if rows is None:
+        rows = default_rows(n, keys.dtype.itemsize, k)
+    if not rows or n % (rows * LANES):
+        raise ValueError(f"n={n} must be a multiple of a rows*{LANES} tile")
+    bucket, hist = radix_histogram(
+        keys.reshape(B * n),
+        k=k, consumed_bits=consumed_bits, rows=rows, interpret=interpret,
+    )
+    return bucket.reshape(B, n), hist.reshape(B, n // (rows * LANES), 2 * k)

@@ -123,11 +123,13 @@ def _rank_kernel(start_ref, bid_ref, dest_ref, run_ref, *, nb: int, rows: int):
     flat = bid.reshape(rows * LANES, 1)
     ids = jax.lax.broadcasted_iota(jnp.int32, (1, nb), 1)
     onehot = (flat == ids).astype(jnp.int32)  # (tile, nb)
-    excl = jnp.cumsum(onehot, axis=0) - onehot  # exclusive prefix per bucket
-    rank_in_tile = jnp.sum(excl * onehot, axis=1)  # (tile,)
-    base = jnp.sum(onehot * (start_ref[...] + run_ref[...]), axis=1)
+    # dtype= pins the accumulators: with x64 enabled (u64 keys) the
+    # reductions would widen int32 to int64 and mismatch the int32 refs
+    excl = jnp.cumsum(onehot, axis=0, dtype=jnp.int32) - onehot
+    rank_in_tile = jnp.sum(excl * onehot, axis=1, dtype=jnp.int32)  # (tile,)
+    base = jnp.sum(onehot * (start_ref[...] + run_ref[...]), axis=1, dtype=jnp.int32)
     dest_ref[...] = (base + rank_in_tile).reshape(rows, LANES)
-    run_ref[...] = run_ref[...] + jnp.sum(onehot, axis=0)[None, :]
+    run_ref[...] = run_ref[...] + jnp.sum(onehot, axis=0, dtype=jnp.int32)[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("nb", "rows", "interpret"))

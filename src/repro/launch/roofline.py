@@ -23,7 +23,7 @@ from dataclasses import asdict, dataclass, field
 from typing import Dict, Optional
 
 __all__ = ["HW", "collective_bytes", "roofline_terms", "RooflineReport",
-           "model_flops"]
+           "model_flops", "classify_tile_rows"]
 
 # TPU v5e per chip
 HW = {
@@ -32,7 +32,57 @@ HW = {
     "ici_bw": 50e9,             # B/s per link
     "ici_links": 4,             # links/chip on a 2-D torus (16x16 pod)
     "hbm_bytes": 16 * 2**30,    # capacity
+    "vmem_bytes": 16 * 2**20,   # VMEM per core — the Pallas tile budget
 }
+
+# classify-kernel tile model (kernels/classify.py): lanes per VPU row, the
+# VMEM fraction a double-buffered kernel may claim for one grid step, and
+# the largest row count worth scheduling (past it the grid has too few
+# steps to pipeline).
+_CLASSIFY_LANES = 128
+_CLASSIFY_VMEM_FRACTION = 3   # 1/3: input double-buffer + in-flight outputs
+_CLASSIFY_MAX_ROWS = 128
+
+
+def classify_tile_rows(
+    key_bytes: int,
+    k: int,
+    *,
+    vmem_bytes: Optional[int] = None,
+    max_rows: int = _CLASSIFY_MAX_ROWS,
+) -> tuple:
+    """Row-count candidates for the fused classify kernels, from the VMEM
+    roofline instead of a hard-coded constant.
+
+    One grid step of ``kernels/classify.py`` holds, per tile row of 128
+    lanes: the keys (``key_bytes`` each), the int32 one-hot / compare
+    broadcast against nb = 2k buckets, and the int32 bucket output — so
+
+        bytes_per_row = 128 * (key_bytes + 4 * 2k + 4)
+
+    and the largest power-of-two row count fitting a third of VMEM
+    (input double-buffer + in-flight outputs) leads a descending
+    candidate tuple; the plan cache sweeps the leading entries and the
+    level pass picks the largest candidate dividing n.  At the defaults
+    (f32/u32 keys, k = 128, 16 MiB VMEM) this reproduces the previously
+    hard-coded 32 rows.
+
+    >>> classify_tile_rows(4, 128)[0]
+    32
+    >>> classify_tile_rows(4, 32)[0] > classify_tile_rows(8, 256)[0]
+    True
+    """
+    budget = (HW["vmem_bytes"] if vmem_bytes is None else vmem_bytes)
+    budget //= _CLASSIFY_VMEM_FRACTION
+    per_row = _CLASSIFY_LANES * (key_bytes + 4 * (2 * k) + 4)
+    rows = 1
+    while rows * 2 <= max_rows and (rows * 2) * per_row <= budget:
+        rows *= 2
+    out = []
+    while rows >= 1:
+        out.append(rows)
+        rows //= 2
+    return tuple(out)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -22,6 +22,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.classify import resolve_classifier
 from repro.core.ips4o import (
     SortConfig,
     resolve_engine,
@@ -47,14 +48,18 @@ __all__ = [
 
 
 def with_engine_batched(
-    cfg: SortConfig, engine: Optional[str], keys: Optional[jax.Array] = None
+    cfg: SortConfig,
+    engine: Optional[str],
+    keys: Optional[jax.Array] = None,
+    classifier: Optional[str] = None,
 ) -> SortConfig:
-    """Override the partition engine on a config for a batched call.
+    """Override the partition engine and/or classifier for a batched call.
 
-    The batched analogue of ``ops.sort.with_engine``: "auto" resolves here,
-    against the caller's original (B, n, dtype) — the plan cache keys
-    batched plans under exactly that triple, so resolving deeper (against
-    the encoded dtype / padded n) would never match a persisted plan.
+    The batched analogue of ``ops.sort.with_engine``: "auto" (for either
+    knob) resolves here, against the caller's original (B, n, dtype) — the
+    plan cache keys batched plans under exactly that triple, so resolving
+    deeper (against the encoded dtype / padded n) would never match a
+    persisted plan.
 
     >>> from repro.ops import SortConfig
     >>> import jax.numpy as jnp
@@ -63,13 +68,23 @@ def with_engine_batched(
     'pallas'
     >>> with_engine_batched(cfg, None).engine  # None keeps cfg.engine
     'pallas'
+    >>> with_engine_batched(SortConfig(), None, classifier="radix").classifier
+    'radix'
     """
     cfg = cfg if engine is None else replace(cfg, engine=engine)
-    if cfg.engine == "auto" and keys is not None:
+    if classifier is not None:
+        cfg = replace(cfg, classifier=classifier)
+    if keys is not None:
         B, n = keys.shape
-        cfg = replace(
-            cfg, engine=resolve_engine(cfg, n, keys.dtype, batch=B)
-        )
+        if cfg.engine == "auto":
+            cfg = replace(
+                cfg, engine=resolve_engine(cfg, n, keys.dtype, batch=B)
+            )
+        if cfg.classifier == "auto":
+            cfg = replace(
+                cfg,
+                classifier=resolve_classifier("auto", n, keys.dtype, batch=B),
+            )
     return cfg
 
 
@@ -79,6 +94,7 @@ def batched_sort(
     *,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ):
     """Sort each row of ``keys`` (B, n) ascending, NaN-safe, in one trace.
 
@@ -86,7 +102,9 @@ def batched_sort(
     across rows it is one compiled program instead of B dispatches.  An
     optional ``values`` pytree (leaves with leading dims (B, n)) is
     permuted alongside, row by row.  ``engine`` ("xla" | "pallas" |
-    "auto") overrides ``cfg.engine`` for this call.
+    "auto") overrides ``cfg.engine`` for this call; ``classifier``
+    ("tree" | "radix" | "learned" | "auto") overrides ``cfg.classifier``
+    (DESIGN.md §9).
 
     >>> import jax.numpy as jnp
     >>> x = jnp.asarray([[3.0, 1.0, 2.0], [0.0, 5.0, -1.0]])
@@ -98,7 +116,7 @@ def batched_sort(
     """
     if keys.ndim != 2:
         raise ValueError("keys must be 2-D (B, n)")
-    cfg = with_engine_batched(cfg, engine, keys)
+    cfg = with_engine_batched(cfg, engine, keys, classifier)
     enc = keyspace.encode(keys)
     if values is None:
         out = ips4o_sort_batched(enc, cfg=cfg)
@@ -112,6 +130,7 @@ def batched_argsort(
     *,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ) -> jax.Array:
     """Per-row indices that sort ``keys`` (B, n) ascending.
 
@@ -129,7 +148,8 @@ def batched_argsort(
     if n <= 1:
         return idx
     _, order = ips4o_sort_batched(
-        keyspace.encode(keys), idx, cfg=with_engine_batched(cfg, engine, keys)
+        keyspace.encode(keys), idx,
+        cfg=with_engine_batched(cfg, engine, keys, classifier),
     )
     return order
 
@@ -177,6 +197,7 @@ def batched_bottomk(
     *,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Per row: the ``k`` smallest keys ascending, with their indices.
 
@@ -198,7 +219,7 @@ def batched_bottomk(
     if kk == 0:
         return keys[:, :0], jnp.zeros((keys.shape[0], 0), jnp.int32)
     out, idx = _batched_smallest(
-        keyspace.encode(keys), kk, with_engine_batched(cfg, engine, keys)
+        keyspace.encode(keys), kk, with_engine_batched(cfg, engine, keys, classifier)
     )
     return keyspace.decode(out, keys.dtype), idx
 
@@ -209,6 +230,7 @@ def batched_topk(
     *,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Per row: the ``k`` largest keys descending, with their indices.
 
@@ -230,6 +252,6 @@ def batched_topk(
     if kk == 0:
         return keys[:, :0], jnp.zeros((keys.shape[0], 0), jnp.int32)
     out, idx = _batched_smallest(
-        ~keyspace.encode(keys), kk, with_engine_batched(cfg, engine, keys)
+        ~keyspace.encode(keys), kk, with_engine_batched(cfg, engine, keys, classifier)
     )
     return keyspace.decode(~out, keys.dtype), idx

@@ -43,7 +43,18 @@ that decision:
     (``dist_plan``), tuned by a host-side *capacity simulation* — replay
     the level-0 splitter selection on adversarial synthetic draws and keep
     the cheapest candidate whose worst per-pair fill leaves headroom —
-    because collective volume scales linearly with the capacity factor.
+    because collective volume scales linearly with the capacity factor;
+  * the **clf: key family** (DESIGN.md §9) plans the *classifier engine*:
+    ``clf:n=65536:dtype=uint32:dist=uniform`` records which of
+    tree / radix / learned won a wall-clock race of full sorts on a
+    synthetic draw matching that distribution label
+    (``classifier_plan``), and ``classifier_hint`` feeds the winner back
+    to ``SortConfig(classifier="auto")`` callers — by exact label when the
+    caller measured one (``classify.router.classifier_for``), by consensus
+    across labels from the shape-only resolution path.  Plans persisted
+    before the classifier dimension existed load with
+    ``classifier="tree"`` defaulted (the pre-classifier behaviour), not
+    discarded.
 """
 from __future__ import annotations
 
@@ -66,6 +77,46 @@ _OPS = ("sort", "argsort", "topk", "bottomk")
 
 _CFG_FIELDS = frozenset(f.name for f in dataclasses.fields(SortConfig))
 
+# classifier engines the clf: races time against each other ("auto" is the
+# output of a race, never a contestant) and the distribution labels raced —
+# the label vocabulary of ``classify.router.distribution_moments``
+_CLASSIFIER_RACERS = ("tree", "radix", "learned")
+_CLF_DISTS = ("uniform", "dup", "sorted", "skew")
+
+
+def _synthetic_draw(dist: str, count: int, dtype) -> "np.ndarray":
+    """Numpy draw with the shape of one ``distribution_moments`` label, in
+    a numpy dtype safe to ``.astype()`` into ``dtype``."""
+    rng = np.random.default_rng(0)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        if dist == "uniform":
+            return rng.random(count, dtype=np.float32)
+        if dist == "dup":
+            return rng.choice(np.linspace(0.0, 1.0, 97, dtype=np.float32), count)
+        if dist == "sorted":
+            return np.sort(rng.random(count, dtype=np.float32))
+        if dist == "skew":
+            return rng.exponential(size=count).astype(np.float32)
+    else:
+        info = jnp.iinfo(dtype)
+        nd = np.dtype(jnp.dtype(dtype).name)
+        if dist == "uniform":
+            return rng.integers(info.min, info.max, count, endpoint=False, dtype=nd)
+        if dist == "dup":
+            return rng.integers(0, 97, count, dtype=nd)
+        if dist == "sorted":
+            return np.sort(
+                rng.integers(info.min, info.max, count, endpoint=False, dtype=nd)
+            )
+        if dist == "skew":
+            hi = min(int(info.max), 1 << 20)
+            return np.minimum(
+                rng.exponential(scale=hi / 64, size=count), hi
+            ).astype(nd)
+    raise ValueError(
+        f"unknown distribution label {dist!r}; expected one of {_CLF_DISTS}"
+    )
+
 
 def _default_path() -> str:
     return os.environ.get(
@@ -86,12 +137,19 @@ def _engines_for(n: int) -> tuple:
     return ("xla",)
 
 
-def _candidates(n: int, engines: tuple = ("xla",)) -> list:
+def _candidates(n: int, engines: tuple = ("xla",), itemsize: int = 4) -> list:
     """Small sweep around the paper defaults; invalid plans are skipped.
 
     The full W/tile/slack grid runs on the "xla" engine; the "pallas"
     engine adds the default-geometry points only (its constant factors sit
     in the kernels, not the window geometry), keeping the sweep short.
+    The classifier dimension adds one "radix" point per engine (the tree
+    is already every grid point's classifier; learned is raced separately
+    by ``classifier_plan``, where the draw's distribution is controlled),
+    and the "pallas" engine adds one off-default ``classify_rows`` point
+    from the roofline candidate list (``launch.roofline
+    .classify_tile_rows`` at this ``itemsize``) so the fused-kernel tile
+    shape is swept, not assumed.
     """
     out = []
     for base_case, tile in [(8192, 4096), (8192, 2048), (4096, 2048), (16384, 4096)]:
@@ -102,14 +160,22 @@ def _candidates(n: int, engines: tuple = ("xla",)) -> list:
             except ValueError:
                 continue
             out.append(cfg)
+    trial = [SortConfig(classifier="radix")]
     if "pallas" in engines:
         for slack in (8, 4):
-            cfg = SortConfig(slack=slack, engine="pallas")
-            try:
-                plan_levels(max(n, 1), cfg)
-            except ValueError:
-                continue
-            out.append(cfg)
+            trial.append(SortConfig(slack=slack, engine="pallas"))
+        trial.append(SortConfig(engine="pallas", classifier="radix"))
+        from repro.launch.roofline import classify_tile_rows
+
+        rows = classify_tile_rows(itemsize, SortConfig().kmax)
+        if len(rows) > 1:
+            trial.append(SortConfig(engine="pallas", classify_rows=rows[1]))
+    for cfg in trial:
+        try:
+            plan_levels(max(n, 1), cfg)
+        except ValueError:
+            continue
+        out.append(cfg)
     return out
 
 
@@ -311,7 +377,7 @@ class PlanCache:
                              dtype=np.dtype(dtype.name)).reshape(shape)
             )
         best_cfg, best_t = SortConfig(), float("inf")
-        for cfg in _candidates(n, _engines_for(n)):
+        for cfg in _candidates(n, _engines_for(n), dtype.itemsize):
             t = _bench(_build(op, cfg, k, batch), x)
             if t < best_t:
                 best_cfg, best_t = cfg, t
@@ -344,6 +410,122 @@ class PlanCache:
             cfg = plan.get("config")
             engine = cfg.get("engine") if isinstance(cfg, dict) else None
         return engine if engine in ("xla", "pallas") else None
+
+    # -- clf: key family (classifier-engine races) --------------------------
+    @staticmethod
+    def _clf_key(n: int, dtype, dist: str, batch: Optional[int] = None) -> str:
+        b = f"B={batch}:" if batch is not None else ""
+        return f"clf:{b}n={n}:dtype={jnp.dtype(dtype).name}:dist={dist}"
+
+    def classifier_plan(
+        self,
+        n: int,
+        dtype,
+        *,
+        dist: str = "uniform",
+        batch: Optional[int] = None,
+        tune: bool = False,
+        x: Optional[jax.Array] = None,
+    ) -> Optional[str]:
+        """Winning classifier engine for (n, dtype, ``dist`` label), or None.
+
+        ``dist`` is a distribution label from
+        ``classify.router.distribution_moments`` ("uniform" | "dup" |
+        "sorted" | "skew").  A persisted ``clf:`` race wins; ``tune=True``
+        runs the race (full-sort wall clocks for tree vs radix vs learned
+        — the tentpole's per-moments racing) and persists the winner;
+        otherwise None, and the caller falls back to "tree".  The race
+        input is a synthetic draw matching the label, unless the caller
+        passes the actual array ``x`` (``classifier_for``'s eager path
+        does: the label only keys the persisted entry then — the measured
+        input is the real workload, which a four-way label can't fully
+        stand in for).
+
+        >>> import os, tempfile
+        >>> import jax.numpy as jnp
+        >>> pc = PlanCache(path=os.path.join(tempfile.mkdtemp(), "p.json"))
+        >>> pc.classifier_plan(4096, jnp.uint32) is None  # no race yet
+        True
+        """
+        key = self._clf_key(n, dtype, dist, batch)
+        entry = self._plans.get(key)
+        if isinstance(entry, dict) and entry.get("winner") in _CLASSIFIER_RACERS:
+            return entry["winner"]
+        if tune:
+            return self._race_classifiers(n, dtype, dist, batch, x)
+        return None
+
+    def _race_classifiers(
+        self,
+        n: int,
+        dtype,
+        dist: str,
+        batch: Optional[int] = None,
+        x: Optional[jax.Array] = None,
+    ) -> str:
+        """Time a full sort per classifier engine — on the caller's actual
+        array when given, else on a synthetic draw with the asked-for
+        distribution shape; persist and return the winner."""
+        key = self._clf_key(n, dtype, dist, batch)
+        dtype = jnp.dtype(dtype)
+        if x is None:
+            shape = (batch, n) if batch is not None else (n,)
+            count = n if batch is None else batch * n
+            x = jnp.asarray(
+                _synthetic_draw(dist, count, dtype).reshape(shape)
+            ).astype(dtype)
+        times = {}
+        for clf in _CLASSIFIER_RACERS:
+            f = _build("sort", SortConfig(classifier=clf), None, batch)
+            times[clf] = _bench(f, x)
+        winner = min(times, key=times.get)
+        self._plans[key] = {
+            "winner": winner,
+            "us_per_classifier": {
+                c: round(t * 1e6, 1) for c, t in times.items()
+            },
+            "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        self._save()
+        return winner
+
+    def classifier_hint(
+        self,
+        n: int,
+        dtype,
+        batch: Optional[int] = None,
+        dist: Optional[str] = None,
+    ) -> Optional[str]:
+        """Persisted classifier choice for this shape, or None.
+
+        This is what ``SortConfig(classifier="auto")`` resolves through
+        (``classify.router.resolve_classifier``).  With a ``dist`` label
+        (the eager, data-aware path) the exact ``clf:`` race wins.
+        Without one — resolution from shape alone, e.g. under jit — a
+        winner is returned only when every raced label for this (n,
+        dtype[, B]) agrees (consensus: data-independent by construction);
+        failing that, the classifier a tuned same-shape "sort" plan baked
+        in.  None means "no evidence": callers default to "tree".
+        """
+        if dist is not None:
+            got = self.classifier_plan(n, dtype, dist=dist, batch=batch)
+            if got is not None:
+                return got
+        prefix = self._clf_key(n, dtype, "", batch)[: -len("dist=")]
+        winners = {
+            e.get("winner")
+            for k, e in self._plans.items()
+            if k.startswith(prefix) and isinstance(e, dict)
+        } & set(_CLASSIFIER_RACERS)
+        if len(winners) == 1:
+            return next(iter(winners))
+        plan = self._plans.get(self._key("sort", n, dtype, None, batch))
+        if isinstance(plan, dict):
+            cfg = plan.get("config")
+            clf = cfg.get("classifier") if isinstance(cfg, dict) else None
+            if clf in _CLASSIFIER_RACERS:
+                return clf
+        return None
 
     # -- stream: key family (out-of-core merge geometry) --------------------
     @staticmethod

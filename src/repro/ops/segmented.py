@@ -57,6 +57,7 @@ def segmented_sort(
     k: Optional[int] = None,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ):
     """Sort each segment of ``keys`` independently, ascending, NaN-safe.
 
@@ -70,6 +71,12 @@ def segmented_sort(
       k: buckets per segment (power of two); default sizes buckets to the
         average segment like ``plan_levels`` does globally.
       engine: partition-engine override ("xla" | "pallas" | "auto").
+      classifier: accepted for API symmetry with ``sort``, but "radix" and
+        "learned" are mapped to "tree" here: user segments are arbitrary
+        key ranges, not the bit-aligned ranges a radix level 1 produces,
+        so the shared bit extractor is not monotone within them, and the
+        global CDF model has no per-segment form.  The per-segment
+        sampled tree is the only engine whose contract covers this op.
 
     Returns sorted keys, or (keys, values) when a payload is given.
 
@@ -81,7 +88,13 @@ def segmented_sort(
     """
     from repro.ops.sort import with_engine
 
-    cfg = with_engine(cfg, engine, keys)
+    cfg = with_engine(cfg, engine, keys, classifier)
+    if cfg.classifier != "tree":
+        # see the ``classifier`` arg note: only the per-segment tree is
+        # valid over arbitrary user segments
+        from dataclasses import replace
+
+        cfg = replace(cfg, classifier="tree")
     n = keys.shape[0]
     if keys.ndim != 1:
         raise ValueError("keys must be 1-D")

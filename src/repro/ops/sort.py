@@ -12,6 +12,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.classify import resolve_classifier
 from repro.core.ips4o import SortConfig, ips4o_sort, resolve_engine
 from repro.ops import keyspace
 
@@ -19,25 +20,42 @@ __all__ = ["sort", "argsort", "with_engine"]
 
 
 def with_engine(
-    cfg: SortConfig, engine: Optional[str], keys: Optional[jax.Array] = None
+    cfg: SortConfig,
+    engine: Optional[str],
+    keys: Optional[jax.Array] = None,
+    classifier: Optional[str] = None,
 ) -> SortConfig:
-    """Override the partition engine on a config (None keeps cfg.engine).
+    """Override the partition engine and/or classifier on a config (None
+    keeps the cfg's value).
 
-    When ``keys`` is given, "auto" is resolved HERE — against the caller's
-    original (n, dtype), which is what the plan cache keys tuned plans
-    under.  Deeper layers see the keyspace-encoded dtype and the padded n,
-    so resolving any later would never match a persisted plan.
+    When ``keys`` is given, "auto" (for either knob) is resolved HERE —
+    against the caller's original (n, dtype), which is what the plan cache
+    keys tuned plans under.  Deeper layers see the keyspace-encoded dtype
+    and the padded n, so resolving any later would never match a persisted
+    plan.
 
     >>> with_engine(SortConfig(), "pallas").engine
     'pallas'
     >>> with_engine(SortConfig(engine="pallas"), None).engine
     'pallas'
+    >>> with_engine(SortConfig(), None, classifier="radix").classifier
+    'radix'
     """
     cfg = cfg if engine is None else replace(cfg, engine=engine)
-    if cfg.engine == "auto" and keys is not None:
-        cfg = replace(
-            cfg, engine=resolve_engine(cfg, keys.shape[0], keys.dtype)
-        )
+    if classifier is not None:
+        cfg = replace(cfg, classifier=classifier)
+    if keys is not None:
+        if cfg.engine == "auto":
+            cfg = replace(
+                cfg, engine=resolve_engine(cfg, keys.shape[0], keys.dtype)
+            )
+        if cfg.classifier == "auto":
+            cfg = replace(
+                cfg,
+                classifier=resolve_classifier(
+                    "auto", keys.shape[0], keys.dtype
+                ),
+            )
     return cfg
 
 
@@ -47,10 +65,13 @@ def sort(
     *,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ):
     """Sort ``keys`` ascending (NaNs last, -0.0 before +0.0), optionally
     permuting a ``values`` pytree alongside.  Jit-compatible.  ``engine``
-    ("xla" | "pallas" | "auto") overrides ``cfg.engine`` for this call.
+    ("xla" | "pallas" | "auto") overrides ``cfg.engine`` for this call;
+    ``classifier`` ("tree" | "radix" | "learned" | "auto") overrides
+    ``cfg.classifier`` the same way (DESIGN.md §9).
 
     >>> import jax.numpy as jnp
     >>> sort(jnp.asarray([3.0, 1.0, 2.0])).tolist()
@@ -59,7 +80,7 @@ def sort(
     >>> (k.tolist(), v["tag"].tolist())  # payload rows follow their keys
     ([1, 2], [10, 20])
     """
-    cfg = with_engine(cfg, engine, keys)
+    cfg = with_engine(cfg, engine, keys, classifier)
     enc = keyspace.encode(keys)
     if values is None:
         out = ips4o_sort(enc, cfg=cfg)
@@ -73,6 +94,7 @@ def argsort(
     *,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ) -> jax.Array:
     """Indices that sort ``keys`` ascending: ``keys[argsort(keys)]`` is
     sorted.  The index payload rides the existing values-pytree threading;
@@ -86,5 +108,7 @@ def argsort(
     idx = jnp.arange(n, dtype=jnp.int32)
     if n <= 1:
         return idx
-    _, order = ips4o_sort(keyspace.encode(keys), idx, cfg=with_engine(cfg, engine, keys))
+    _, order = ips4o_sort(
+        keyspace.encode(keys), idx, cfg=with_engine(cfg, engine, keys, classifier)
+    )
     return order

@@ -89,6 +89,7 @@ def bottomk(
     *,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """The ``k`` smallest keys in ascending order, with their indices.
 
@@ -113,7 +114,9 @@ def bottomk(
     kk = max(0, min(int(k), n))
     if kk == 0:
         return keys[:0], jnp.zeros((0,), jnp.int32)
-    out, idx = smallest_encoded(keyspace.encode(keys), kk, with_engine(cfg, engine, keys))
+    out, idx = smallest_encoded(
+        keyspace.encode(keys), kk, with_engine(cfg, engine, keys, classifier)
+    )
     return keyspace.decode(out, keys.dtype), idx
 
 
@@ -123,6 +126,7 @@ def topk(
     *,
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
+    classifier: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """The ``k`` largest keys in descending order, with their indices.
 
@@ -145,5 +149,7 @@ def topk(
     kk = max(0, min(int(k), n))
     if kk == 0:
         return keys[:0], jnp.zeros((0,), jnp.int32)
-    out, idx = smallest_encoded(~keyspace.encode(keys), kk, with_engine(cfg, engine, keys))
+    out, idx = smallest_encoded(
+        ~keyspace.encode(keys), kk, with_engine(cfg, engine, keys, classifier)
+    )
     return keyspace.decode(~out, keys.dtype), idx

@@ -1,0 +1,446 @@
+"""Classifier-parity suite: every engine of the ``repro.classify`` seam
+(DESIGN.md §9) must produce a keyspace-order stable sort bit-identical to
+the tree baseline, on every paper distribution, on both partition engines.
+
+Covers: sorted-output parity on all nine distributions x {f32, i32, u64}
+x {tree, radix, learned} x {xla, pallas}; the skew cases (zipf, all-equal,
+one-hot) where the learned engine must trip its imbalance fallback rather
+than degrade; the radix extractor unit contract (shift math, sentinel
+equality bit, monotonicity, unsigned-only); the fused radix kernel vs its
+XLA oracle; the learned model's monotonicity and imbalance score; the
+roofline-derived kernel tile rows; classifier threading through every ops
+entry point (incl. the segmented exclusion); the ``clf:`` plan-cache race
+/ hint / "auto" resolution; and stale pre-classifier plan migration.
+"""
+import json
+from dataclasses import replace
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import ops
+from repro.classify import (
+    IMBALANCE_THRESHOLD,
+    classifier_for,
+    distribution_moments,
+    eval_cdf_buckets,
+    fit_cdf_knots,
+    learned_bucket_ids,
+    radix_bucket_ids,
+    radix_shift,
+    resolve_classifier,
+    sample_imbalance,
+)
+from repro.core.ips4o import SortConfig, plan_levels
+from repro.core.sampling import sentinel_for
+from repro.data.distributions import DISTRIBUTIONS, make_input
+from repro.launch.roofline import classify_tile_rows
+
+_cfg = SortConfig(base_case=1024, kmax=32, tile=256, max_sample=256, slack=4)
+_N = 5000
+_CLFS = ("tree", "radix", "learned")
+
+
+def _enc_sorted(x, cfg, classifier, engine):
+    """Keyspace codes of the sorted output — the bit-exact comparison space
+    (decode order equals keyspace order, but -0.0/+0.0 and NaN classes are
+    only distinguishable pre-decode)."""
+    out = ops.sort(jnp.asarray(x), cfg=cfg, classifier=classifier, engine=engine)
+    return np.asarray(ops.keyspace.encode(out))
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("dist", sorted(DISTRIBUTIONS))
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_classifier_parity_distributions(dist, dtype):
+    x = make_input(dist, _N, dtype, seed=7)
+    want = np.sort(np.asarray(ops.keyspace.encode(jnp.asarray(x))), kind="stable")
+    for clf in _CLFS:
+        for engine in ("xla", "pallas"):
+            got = _enc_sorted(x, _cfg, clf, engine)
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"clf={clf} engine={engine}"
+            )
+
+
+_U64_CHILD = """
+import numpy as np
+import jax.numpy as jnp
+from repro import ops
+from repro.core.ips4o import SortConfig
+from repro.data.distributions import DISTRIBUTIONS, make_input
+
+cfg = SortConfig(base_case=1024, kmax=32, tile=256, max_sample=256, slack=4)
+for dist in sorted(DISTRIBUTIONS):
+    x = make_input(dist, 5000, np.uint64, seed=7)
+    want = np.sort(x, kind="stable")
+    for clf in ("tree", "radix", "learned"):
+        for engine in ("xla", "pallas"):
+            out = ops.sort(jnp.asarray(x), cfg=cfg, classifier=clf, engine=engine)
+            np.testing.assert_array_equal(
+                np.asarray(out), want, err_msg=f"{dist} clf={clf} engine={engine}"
+            )
+print("u64 parity OK")
+"""
+
+
+def test_classifier_parity_u64_subprocess():
+    """All nine distributions x {tree, radix, learned} x {xla, pallas} on
+    u64 keys.  Runs in a child process with x64 enabled from startup:
+    flipping ``enable_x64`` mid-process destabilizes this jaxlib (compiled
+    artifacts from both modes coexisting in one CPU client can segfault a
+    later unrelated compile), so the widest dtype gets its own process."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ, JAX_ENABLE_X64="1", JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep
+        + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _U64_CHILD],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "u64 parity OK" in proc.stdout
+
+
+@pytest.mark.parametrize("clf", _CLFS)
+def test_classifier_two_level(clf):
+    """kmax=8 forces the segmented second level: radix must shift past the
+    level-1 bits, learned must map back to the per-segment tree."""
+    cfg = SortConfig(base_case=512, kmax=8, tile=256, max_sample=256, slack=4)
+    x = make_input("Uniform", 8000, np.int32, seed=3)
+    assert len(plan_levels(8192, cfg)) == 2  # 8000 pads to 8192 -> [8, 8]
+    for engine in ("xla", "pallas"):
+        out = np.asarray(
+            ops.sort(jnp.asarray(x), cfg=cfg, classifier=clf, engine=engine)
+        )
+        np.testing.assert_array_equal(out, np.sort(x))
+
+
+def test_classifier_parity_batched():
+    x = np.stack(
+        [make_input(d, 4096, np.float32, seed=5)
+         for d in ("Uniform", "TwoDup", "Sorted")]
+    )
+    want = np.sort(x, axis=1)
+    for clf in _CLFS:
+        for engine in ("xla", "pallas"):
+            out = np.asarray(
+                ops.batched_sort(
+                    jnp.asarray(x), cfg=_cfg, classifier=clf, engine=engine
+                )
+            )
+            np.testing.assert_array_equal(
+                out, want, err_msg=f"clf={clf} engine={engine}"
+            )
+
+
+def test_classifier_with_payload():
+    x = make_input("TwoDup", _N, np.float32, seed=11)
+    v = jnp.arange(_N, dtype=jnp.int32)
+    for clf in _CLFS:
+        k_out, v_out = ops.sort(jnp.asarray(x), v, cfg=_cfg, classifier=clf)
+        np.testing.assert_array_equal(x[np.asarray(v_out)], np.asarray(k_out))
+
+
+# ------------------------------------------------------- skew / fallback
+def _skew_inputs():
+    rng = np.random.default_rng(0)
+    zipf = np.minimum(rng.zipf(1.5, _N), 1 << 20).astype(np.int32)
+    all_equal = np.full(_N, 42, np.int32)
+    one_hot = np.zeros(_N, np.int32)
+    one_hot[rng.integers(0, _N)] = 1
+    return {"zipf": zipf, "all_equal": all_equal, "one_hot": one_hot}
+
+
+@pytest.mark.parametrize("name", ["zipf", "all_equal", "one_hot"])
+def test_learned_skew_falls_back_not_degrades(name):
+    """On heavy skew the learned engine must reroute through the tree (its
+    sample-measured imbalance trips the threshold) and still sort exactly
+    — never pay the full-sort robustness fallback for a bad fit."""
+    x = _skew_inputs()[name]
+    out = np.asarray(ops.sort(jnp.asarray(x), cfg=_cfg, classifier="learned"))
+    np.testing.assert_array_equal(out, np.sort(x))
+    # the fallback itself: fit on a sample of this input, check the trigger
+    enc = ops.keyspace.encode(jnp.asarray(x))
+    k = 32
+    sample = jnp.sort(enc[:256])
+    knots = fit_cdf_knots(sample)
+    imb = float(sample_imbalance(sample, knots, k))
+    if name == "zipf":
+        # zipf keeps some spread: the model may cope; only assert the
+        # guard's contract — imbalance below threshold means balanced
+        b, fell = learned_bucket_ids(enc, sample, jnp.sort(enc[:256])[8::8][:31], k)
+        if not bool(fell):
+            counts = np.bincount(np.asarray(b) // 2, minlength=k)
+            assert counts.max() * k / enc.shape[0] <= IMBALANCE_THRESHOLD * 2
+    else:
+        assert imb > IMBALANCE_THRESHOLD  # degenerate fits must trip it
+
+
+def test_learned_fallback_flag_all_equal():
+    keys = jnp.full((1024,), 7, jnp.uint32)
+    sample = jnp.sort(keys[:64])
+    spl = jnp.full((31,), 7, jnp.uint32)
+    b, fell = learned_bucket_ids(keys, sample, spl, 32)
+    assert bool(fell)
+    # fallback = the tree's ids, bit for bit
+    from repro.classify import classify
+
+    np.testing.assert_array_equal(
+        np.asarray(b), np.asarray(classify(keys, spl, 32))
+    )
+
+
+# ------------------------------------------------------------ radix unit
+def test_radix_shift_math():
+    assert radix_shift(jnp.uint32, 128) == 32 - 7
+    assert radix_shift(jnp.uint32, 128, consumed_bits=7) == 32 - 14
+    assert radix_shift(jnp.uint8, 128, consumed_bits=7) == 0  # clamped
+    with pytest.raises(ValueError):
+        radix_shift(jnp.int32, 128)
+    with pytest.raises(ValueError):
+        radix_shift(jnp.float32, 128)
+
+
+def test_radix_bucket_ids_contract():
+    rng = np.random.default_rng(1)
+    keys = jnp.asarray(rng.integers(0, 2**32, 4096, dtype=np.uint32))
+    k = 32
+    b = np.asarray(radix_bucket_ids(keys, k))
+    assert b.min() >= 0 and b.max() < 2 * k
+    # monotone in the key, and exactly the top-bits bucket
+    order = np.argsort(np.asarray(keys), kind="stable")
+    assert (np.diff(b[order]) >= 0).all()
+    np.testing.assert_array_equal(b // 2, np.asarray(keys) >> (32 - 5))
+    # sentinel gets the equality bit (odd id), others stay even
+    sent = sentinel_for(keys.dtype)
+    bs = np.asarray(radix_bucket_ids(jnp.asarray([sent, sent - 1]), k))
+    assert bs[0] == 2 * k - 1 and bs[1] % 2 == 0
+
+
+def test_radix_kernel_vs_oracle():
+    from repro.kernels.classify import radix_histogram, radix_histogram_batched
+
+    rng = np.random.default_rng(2)
+    n, k = 4096, 32
+    keys = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    for consumed in (0, 5):
+        b, hist = radix_histogram(keys, k=k, consumed_bits=consumed, rows=2)
+        want = np.asarray(radix_bucket_ids(keys, k, consumed))
+        np.testing.assert_array_equal(np.asarray(b), want)
+        np.testing.assert_array_equal(
+            np.asarray(hist).sum(axis=0), np.bincount(want, minlength=2 * k)
+        )
+    kb = jnp.asarray(rng.integers(0, 2**32, (3, n), dtype=np.uint32))
+    bb, hb = radix_histogram_batched(kb, k=k, rows=2)
+    wantb = np.asarray(radix_bucket_ids(kb, k))
+    np.testing.assert_array_equal(np.asarray(bb), wantb)
+    np.testing.assert_array_equal(
+        np.asarray(hb).sum(axis=1),
+        np.stack([np.bincount(r, minlength=2 * k) for r in wantb]),
+    )
+
+
+def test_dist_radix_dest_unit():
+    from repro.dist.exchange import _radix_dest
+
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.integers(0, 2**32, 1024, dtype=np.uint32))
+    valid = jnp.arange(1024, dtype=jnp.int32) < 1000
+    dest, counts = _radix_dest(keys, valid, 8)
+    d = np.asarray(dest)
+    np.testing.assert_array_equal(
+        d[:1000], (np.asarray(keys) >> 29)[:1000]
+    )
+    assert (d[1000:] == 8).all()  # pads -> trash bucket
+    np.testing.assert_array_equal(
+        np.asarray(counts), np.bincount(d[:1000], minlength=8)
+    )
+
+
+# ---------------------------------------------------------- learned unit
+def test_learned_model_monotone():
+    rng = np.random.default_rng(4)
+    sample = jnp.sort(jnp.asarray(rng.integers(0, 2**32, 256, dtype=np.uint32)))
+    knots = fit_cdf_knots(sample)
+    keys = jnp.sort(jnp.asarray(rng.integers(0, 2**32, 8192, dtype=np.uint32)))
+    j = np.asarray(eval_cdf_buckets(keys, knots, 64))
+    assert (np.diff(j) >= 0).all()
+    assert j.min() >= 0 and j.max() < 64
+
+
+def test_sample_imbalance_scores():
+    rng = np.random.default_rng(5)
+    uniform = jnp.sort(jnp.asarray(rng.integers(0, 2**32, 512, dtype=np.uint32)))
+    assert float(sample_imbalance(uniform, fit_cdf_knots(uniform), 32)) < 2.0
+    degenerate = jnp.full((512,), 7, jnp.uint32)
+    assert (
+        float(sample_imbalance(degenerate, fit_cdf_knots(degenerate), 32))
+        > IMBALANCE_THRESHOLD
+    )
+
+
+# ------------------------------------------------------------- tile rows
+def test_classify_tile_rows_properties():
+    rows = classify_tile_rows(4, 128)
+    assert rows[0] == 32  # reproduces the previously hard-coded tile
+    assert list(rows) == sorted(rows, reverse=True)
+    assert all(r & (r - 1) == 0 for r in rows) and rows[-1] == 1
+    # smaller rows-budget per element -> no larger leading tile
+    assert classify_tile_rows(8, 256)[0] <= classify_tile_rows(4, 32)[0]
+    assert classify_tile_rows(4, 128, vmem_bytes=1 << 30)[0] == 128  # capped
+
+
+def test_default_rows_divisibility():
+    from repro.kernels.classify import default_rows
+
+    r = default_rows(32 * 128, 4, 128)
+    assert r and (32 * 128) % (r * 128) == 0
+    assert default_rows(100, 4, 128) == 0  # not 128-aligned: no kernel
+
+
+def test_classify_rows_override_threads_through():
+    x = make_input("Uniform", 4096, np.float32, seed=8)
+    cfg = replace(_cfg, classify_rows=2, engine="pallas")
+    out = np.asarray(ops.sort(jnp.asarray(x), cfg=cfg))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+# -------------------------------------------------------- ops threading
+def test_classifier_threads_through_ops():
+    x = jnp.asarray(make_input("Exponential", _N, np.float32, seed=5))
+    want_bottom = np.sort(np.asarray(x))[:37]
+    for clf in _CLFS:
+        vals, _ = ops.bottomk(x, 37, cfg=_cfg, classifier=clf)
+        np.testing.assert_array_equal(np.asarray(vals), want_bottom)
+        vals, _ = ops.topk(x, 23, cfg=_cfg, classifier=clf)
+        np.testing.assert_array_equal(
+            np.asarray(vals), np.sort(np.asarray(x))[::-1][:23]
+        )
+        idx = ops.argsort(x, cfg=_cfg, classifier=clf)
+        assert (np.diff(np.asarray(x)[np.asarray(idx)]) >= 0).all()
+
+
+def test_segmented_sort_maps_radix_to_tree():
+    """User segments are not bit-aligned: segmented_sort must accept the
+    kwarg for API symmetry but classify with the per-segment tree."""
+    x = jnp.asarray(make_input("Uniform", _N, np.float32, seed=6))
+    off = jnp.asarray([0, 1500, 1500, _N], jnp.int32)
+    want = np.asarray(ops.segmented_sort(x, off, 3, cfg=_cfg))
+    for clf in ("radix", "learned", "auto"):
+        got = np.asarray(ops.segmented_sort(x, off, 3, cfg=_cfg, classifier=clf))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_batched_rank_k_classifier():
+    x = jnp.asarray(
+        np.stack([make_input("Uniform", 4096, np.float32, seed=s) for s in (1, 2)])
+    )
+    want = np.sort(np.asarray(x), axis=1)[:, :17]
+    for clf in _CLFS:
+        vals, _ = ops.batched_bottomk(x, 17, cfg=_cfg, classifier=clf)
+        np.testing.assert_array_equal(np.asarray(vals), want)
+
+
+# ------------------------------------------------------------ the router
+def test_resolve_classifier_contract():
+    for clf in _CLFS:
+        assert resolve_classifier(clf) == clf
+    assert resolve_classifier("auto") == "tree"  # nothing raced
+    with pytest.raises(ValueError, match="classifier"):
+        resolve_classifier("neural")
+
+
+def test_distribution_moments_labels():
+    rng = np.random.default_rng(9)
+    assert distribution_moments(rng.integers(0, 2**31, 8192)) == "uniform"
+    assert distribution_moments(rng.integers(0, 5, 8192)) == "dup"
+    assert distribution_moments(np.sort(rng.standard_normal(8192))) == "sorted"
+    # distinct values (not "dup") but lopsided in the value range: the
+    # exponential's long tail stretches the bins while the mass stays low
+    assert distribution_moments(rng.exponential(1.0, 8192)) == "skew"
+    assert distribution_moments(np.asarray([], np.int32)) == "uniform"
+
+
+def test_classifier_race_persists_and_routes(tmp_path, monkeypatch):
+    from repro.ops import plan as plan_mod
+
+    pc = ops.PlanCache(path=str(tmp_path / "plans.json"))
+    n = 4096
+    winner = pc.classifier_plan(n, jnp.uint32, dist="uniform", tune=True)
+    assert winner in _CLFS
+    entry = pc._plans[pc._clf_key(n, jnp.uint32, "uniform")]
+    assert entry["winner"] == winner
+    assert set(entry["us_per_classifier"]) == set(_CLFS)
+    # persisted across processes
+    pc2 = ops.PlanCache(path=pc.path)
+    assert pc2.classifier_plan(n, jnp.uint32, dist="uniform") == winner
+    # single raced label -> consensus hint; a conflicting label kills it
+    assert pc2.classifier_hint(n, jnp.uint32) == winner
+    other = "tree" if winner != "tree" else "radix"
+    pc2._plans[pc2._clf_key(n, jnp.uint32, "dup")] = {"winner": other}
+    assert pc2.classifier_hint(n, jnp.uint32) is None
+    assert pc2.classifier_hint(n, jnp.uint32, dist="uniform") == winner
+    # "auto" resolution consults the default cache
+    monkeypatch.setattr(plan_mod, "default_cache", pc)
+    assert resolve_classifier("auto", n, jnp.uint32) == winner
+    assert resolve_classifier("auto", n + 1, jnp.uint32) == "tree"
+
+
+def test_classifier_for_eager_routing(tmp_path):
+    pc = ops.PlanCache(path=str(tmp_path / "plans.json"))
+    x = jnp.asarray(
+        np.random.default_rng(1).integers(0, 2**31, 4096, dtype=np.int32)
+    )
+    clf = classifier_for(x, cache=pc, tune=True)
+    assert clf in _CLFS
+    assert pc.classifier_plan(4096, jnp.int32, dist="uniform") == clf
+
+
+def test_auto_classifier_sort_end_to_end(tmp_path, monkeypatch):
+    """classifier="auto" must route through a raced winner and still sort."""
+    from repro.ops import plan as plan_mod
+
+    pc = ops.PlanCache(path=str(tmp_path / "plans.json"))
+    pc._plans[pc._clf_key(_N, jnp.float32, "uniform")] = {"winner": "radix"}
+    monkeypatch.setattr(plan_mod, "default_cache", pc)
+    x = make_input("Uniform", _N, np.float32, seed=12)
+    out = np.asarray(ops.sort(jnp.asarray(x), cfg=_cfg, classifier="auto"))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+# ------------------------------------------------------------ plan cache
+def test_plan_cache_stale_pre_classifier_plan_loads(tmp_path):
+    """Plans persisted before the classifier dimension existed must load
+    with classifier="tree" defaulted — migrated, not discarded."""
+    path = str(tmp_path / "plans.json")
+    stale = {
+        "sort:n=4096:dtype=float32": {
+            "config": {"base_case": 1024, "kmax": 32, "tile": 256,
+                       "max_sample": 256, "slack": 4, "engine": "pallas"},
+            "engine": "pallas",
+            "us": 2.0,
+        },
+    }
+    with open(path, "w") as fh:
+        json.dump(stale, fh)
+    pc = ops.PlanCache(path=path)
+    cfg = pc.config_for("sort", 4096, jnp.float32)
+    assert cfg.classifier == "tree" and cfg.classify_rows == 0
+    assert cfg.engine == "pallas" and cfg.base_case == 1024  # tuned fields kept
+    assert pc.classifier_hint(4096, jnp.float32) is None  # no claim either way
+    # a tuned plan that DID bake a classifier feeds the hint
+    pc._plans["sort:n=2048:dtype=float32"] = {
+        "config": {"classifier": "radix"}, "engine": "xla", "us": 1.0,
+    }
+    assert pc.classifier_hint(2048, jnp.float32) == "radix"
