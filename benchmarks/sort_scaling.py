@@ -33,11 +33,12 @@ os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
 import jax, time
 import jax.numpy as jnp
 import numpy as np
-from repro.core.distributed import make_distributed_sorter
+import functools
+from repro import dist
 from repro.launch.hlo_cost import analyze_hlo
 
 mesh = jax.make_mesh((d,), ("data",))
-sorter = make_distributed_sorter(mesh, axis="data")
+sorter = jax.jit(functools.partial(dist.sort, mesh=mesh, axis="data"))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.random(n, dtype=np.float32))
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -32,6 +32,7 @@ from benchmarks.common import Row, bench, check_sorted
 SIZES = [1 << 16, 1 << 18, 1 << 20, 1 << 22]
 DTYPES = [jnp.float32, jnp.uint32]
 _PALLAS_MAX = 1 << 18  # off-TPU interpret-mode ceiling for pallas rows
+_KERNEL_N = 1 << 20    # per-kernel rows: the DESIGN.md §10 comparison size
 
 
 def _partition_only(x: jax.Array, cfg: SortConfig):
@@ -49,6 +50,79 @@ def _engines(n: int) -> list:
         return ["xla", "pallas"]
     print(f"# n={n}: pallas rows skipped (interpret mode past {_PALLAS_MAX})")
     return ["xla"]
+
+
+def _kernel_rows(quick: bool) -> list:
+    """Per-kernel microbenchmarks (DESIGN.md §10), uniform u32.
+
+    ``level_fused`` is timed against the *three-pass* composition it
+    replaced (classify kernel -> histogram glue -> counting-rank kernel —
+    no longer a production path, composed here from the surviving pieces)
+    at the same n; ``block_permute`` is the swap-cycle in-place block
+    move.  Both engines run in interpret mode off-TPU, so the fused vs
+    three-pass ratio compares like with like.
+    """
+    from repro.kernels.block_permute import permute_blocks_by_dest, stable_block_dest
+    from repro.kernels.classify import classify_histogram
+    from repro.kernels.dispatch_rank import partition_ranks
+    from repro.kernels.level_fused import level_fused
+
+    rows: list[Row] = []
+    k = 64
+    n = (1 << 18) if quick else _KERNEL_N
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(0, 2**32 - 1, n, dtype=np.uint32))
+    spl = jnp.sort(jnp.asarray(
+        rng.integers(0, 2**32 - 1, k - 1, dtype=np.uint32)
+    ))
+
+    fused = jax.jit(partial(level_fused, k=k, interpret=True))
+
+    @jax.jit
+    def three_pass(keys, spl):
+        # the pre-§10 production tiles: classify at the old roofline rows,
+        # counting-rank at its former hard-coded rows=8 default
+        b, hist = classify_histogram(keys, spl, k=k, rows=32, interpret=True)
+        totals = hist.sum(axis=0)
+        off = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(totals).astype(jnp.int32)]
+        )
+        dest = partition_ranks(b, off[:-1], nb=2 * k, rows=8, interpret=True)
+        return dest, off
+
+    # identical placements (the fused kernel's whole contract)
+    d_f, o_f = fused(x, spl)
+    d_t, o_t = three_pass(x, spl)
+    np.testing.assert_array_equal(np.asarray(d_f), np.asarray(d_t))
+    # fused offsets carry one extra boundary (the empty pad bucket)
+    np.testing.assert_array_equal(np.asarray(o_f[: o_t.shape[0]]), np.asarray(o_t))
+
+    t_fused = bench(lambda: fused(x, spl), agg="min")
+    t_three = bench(lambda: three_pass(x, spl), agg="min")
+    for algo, t in (("level_fused", t_fused), ("three_pass", t_three)):
+        rows.append({
+            "bench": "kernel", "algo": algo, "engine": "pallas",
+            "dtype": "uint32", "n": n,
+            "s_per_call": round(t, 5),
+            "meps": round(n / t / 1e6, 2),
+        })
+    print(f"-- fused level pass vs three-pass: {t_three / t_fused:.2f}x "
+          f"(bar: >= 2x) at n={n}")
+
+    block = 1024
+    nblocks = n // block
+    bb = jnp.asarray(rng.integers(0, 2 * k, nblocks, dtype=np.int32))
+    dst = stable_block_dest(bb)
+    mover = jax.jit(partial(permute_blocks_by_dest, block_elems=block,
+                            interpret=True))
+    t_perm = bench(lambda: mover(x, dst), agg="min")
+    rows.append({
+        "bench": "kernel", "algo": "block_permute", "engine": "pallas",
+        "dtype": "uint32", "n": n,
+        "s_per_call": round(t_perm, 5),
+        "meps": round(n / t_perm / 1e6, 2),
+    })
+    return rows
 
 
 def run(quick: bool = False):
@@ -96,10 +170,11 @@ def run(quick: bool = False):
             "bench": "sequential", "algo": "plan", "engine": chosen.engine,
             "dtype": jnp.dtype(dtype).name, "n": n0,
         })
+    rows.extend(_kernel_rows(quick))
     return rows
 
 
 if __name__ == "__main__":
     from benchmarks.common import emit
     emit(run(), ["bench", "algo", "engine", "dtype", "n", "ns_per_elem",
-                 "s_per_call", "part_ns_per_elem"])
+                 "s_per_call", "part_ns_per_elem", "meps"])

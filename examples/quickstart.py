@@ -3,6 +3,8 @@
   PYTHONPATH=src python examples/quickstart.py
 """
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -36,10 +38,10 @@ print("4. RootDup-style input sorted via equality buckets")
 #    runs on the (data,) axis of the production mesh) ----------------------
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.distributed import make_distributed_sorter
+from repro import dist
 
 mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-ds = make_distributed_sorter(mesh)
+ds = jax.jit(functools.partial(dist.sort, mesh=mesh))
 xs = jax.device_put(x, NamedSharding(mesh, P("data")))
 out, counts, overflow = ds(xs)
 assert not bool(jnp.any(overflow))

@@ -31,10 +31,11 @@ concern, not this module's.
 
 The classify+partition hot loops run on one of two engines
 (``SortConfig.engine``): "xla" (dense jnp classification + per-tile-argsort
-partition) or "pallas" (the fused classify+histogram kernel and the
-counting-rank placement kernel — the paper's §4.1/§4.2 loops as real
-kernels); "auto" lets the plan cache / backend pick.  Both engines are
-bit-exact interchangeable (DESIGN.md §4.8).
+partition) or "pallas" (the fused single-pass level kernel
+``kernels.level_fused`` — classify + histogram + rank in ONE grid sweep,
+the paper's §4.1/§4.2 loops as one real kernel); "auto" lets the plan
+cache / backend pick.  Both engines are bit-exact interchangeable
+(DESIGN.md §4.8, §10).
 
 Orthogonally, ``SortConfig.classifier`` picks the bucket-id function each
 level pass uses (``repro.classify``, DESIGN.md §9): "tree" (the paper's
@@ -139,7 +140,7 @@ def _auto_tile(n: int, nb: int, cfg: SortConfig) -> int:
     return tile
 
 
-# Largest bucket count the counting-rank kernel takes on: its per-tile
+# Largest bucket count the fused rank kernel takes on: its per-tile
 # one-hot is (rows*128, nb) in VMEM, so the segmented pass (nb = seg*2k)
 # must drop back to the XLA engine past this.
 _PALLAS_NB_MAX = 1024
@@ -166,16 +167,16 @@ def resolve_engine(cfg: SortConfig, n: int, dtype=None, batch: Optional[int] = N
 
 
 def _classify_rows(n: int, cfg: SortConfig, dtype, k: int) -> int:
-    """Fused-kernel tile rows for this level, or 0 if n is not 128-aligned
-    (the caller then stays on the XLA classifier).  ``cfg.classify_rows``
-    pins a swept value (the plan-cache autotune dimension); 0 derives the
-    largest candidate from the VMEM roofline model
-    (``launch.roofline.classify_tile_rows`` via ``kernels.classify``)."""
-    from repro.kernels.classify import default_rows
+    """Fused level-kernel tile rows for this level, or 0 if no candidate
+    tile divides n (the caller then stays on the XLA classifier).
+    ``cfg.classify_rows`` pins a swept value (the plan-cache autotune
+    dimension); 0 derives the largest ``KernelLaunchSpec`` candidate for
+    the ``"level_fused"`` kernel kind (``launch.roofline.launch_spec``)."""
+    from repro.kernels.level_fused import fused_rows
 
     if cfg.classify_rows:
         return cfg.classify_rows if n % (cfg.classify_rows * 128) == 0 else 0
-    return default_rows(n, jnp.dtype(dtype).itemsize, k)
+    return fused_rows(n, jnp.dtype(dtype).itemsize, k)
 
 
 def segment_ids(offsets: jax.Array, n: int) -> jax.Array:
@@ -277,10 +278,13 @@ def level_pass(
     ``lax.cond`` fallback to the tree; "auto" at this depth means "tree"
     (the plan-cache routing happens at the ``repro.ops`` boundary).
 
-    On the "pallas" engine the classify+histogram and the rank placement
-    run as the fused kernels (``kernels.classify``,
-    ``kernels.dispatch_rank.partition_ranks``); bucket ids, offsets, and
-    the permutation are bit-identical to the "xla" engine.
+    On the "pallas" engine the whole level runs as ONE fused kernel pass
+    (``kernels.level_fused``): classify + per-tile histogram + in-tile
+    rank in a single grid sweep — one HBM read of the keys instead of the
+    former three (classify kernel, histogram glue, counting-rank kernel)
+    — with pads routed to the dedicated bucket in-kernel and a prefix
+    epilogue closing the destinations.  Offsets and the permutation are
+    bit-identical to the "xla" engine (DESIGN.md §10).
     """
     keys = arrays["k"]
     n = keys.shape[0]
@@ -307,33 +311,23 @@ def level_pass(
         sample = jnp.sort(jnp.take(keys, sample_pos, axis=0))
         spl = sampling.select_splitters(sample, k)
 
-    off = None
     if rows:
-        if clf == "radix":
-            from repro.kernels.classify import radix_histogram
+        # the fused single-pass level kernel: classify + histogram + rank
+        # in one grid sweep; pads route to bucket 2k in-kernel; the prefix
+        # epilogue yields the stable destinations and bucket boundaries
+        from repro.kernels.level_fused import level_fused
 
-            b, hist = radix_histogram(
-                keys, k=k, consumed_bits=consumed_bits, rows=rows,
-                interpret=interpret,
-            )
-        else:
-            from repro.kernels.classify import classify_histogram
-
-            b, hist = classify_histogram(
-                keys, spl, k=k, rows=rows, interpret=interpret
-            )
-        # Bucket offsets come from the fused per-tile histogram.  Pads are
-        # all sentinel keys, so the kernel put every one of them in a single
-        # bucket — read it off the first pad position and move the count to
-        # the dedicated pad bucket, mirroring the positional reroute below.
-        totals = hist.sum(axis=0)
-        if pad_n:
-            totals = totals.at[b[n_real]].add(-pad_n)
-        totals = jnp.concatenate(
-            [totals, jnp.full((1,), pad_n, jnp.int32)]
-        ).astype(jnp.int32)
-        off = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(totals)])
-    elif clf == "radix":
+        dest, off = level_fused(
+            keys, None if clf == "radix" else spl, k=k, n_real=n_real,
+            classifier=clf, consumed_bits=consumed_bits, rows=rows,
+            interpret=interpret,
+        )
+        arrays = jax.tree.map(
+            lambda a: jnp.zeros_like(a).at[dest].set(a, mode="promise_in_bounds"),
+            arrays,
+        )
+        return arrays, off, nb, 2 * k
+    if clf == "radix":
         b = radix_bucket_ids(keys, k, consumed_bits)
     elif clf == "learned":
         b, _ = learned_bucket_ids(keys, sample, spl, k)
@@ -344,7 +338,7 @@ def level_pass(
         b = jnp.where(is_pad, 2 * k, b)
     arrays, off = stable_partition(
         b, arrays, nb, _auto_tile(n, nb, cfg), engine=engine,
-        offsets=off, interpret=interpret,
+        interpret=interpret,
     )
     return arrays, off, nb, 2 * k
 
@@ -379,8 +373,8 @@ def segmented_level_pass(
     Classification stays on the XLA path (the composite-bucket classifier
     has no fused kernel; the radix extractor is one shift + mask, already
     as cheap as a kernel); the *partition* honours ``cfg.engine`` as long
-    as nb fits the counting kernel's VMEM one-hot (past ``_PALLAS_NB_MAX``
-    composite buckets it drops back to "xla").
+    as nb fits the fused rank kernel's VMEM one-hot (past
+    ``_PALLAS_NB_MAX`` composite buckets it drops back to "xla").
     """
     keys = arrays["k"]
     n = keys.shape[0]
@@ -593,8 +587,8 @@ def batched_level_pass(
     batched branchless classify -> per-row stable partition.
 
     Returns (arrays, offsets (B, nb+1), nb, pad_bucket) with nb = 2k + 1.
-    On the "pallas" engine the classify+histogram and the rank placement
-    run as the batch-grid kernels (one launch each for all B rows).
+    On the "pallas" engine the whole level runs as ONE batch-grid launch
+    of the fused level kernel (``kernels.level_fused``) for all B rows.
 
     Classifier dispatch mirrors ``level_pass``: "radix" skips the per-row
     sampling entirely (the shift mask is row-independent), "learned" fits
@@ -626,32 +620,23 @@ def batched_level_pass(
         sample = jnp.sort(jnp.take_along_axis(keys, sample_pos, axis=1), axis=1)
         spl = sampling.select_splitters(sample, k)  # (B, k-1) per-row splitters
 
-    off = None
     if rows:
-        if clf == "radix":
-            from repro.kernels.classify import radix_histogram_batched
+        # one batch-grid launch of the fused level kernel for all B rows
+        from repro.kernels.level_fused import level_fused_batched
 
-            b, hist = radix_histogram_batched(
-                keys, k=k, rows=rows, interpret=interpret
-            )
-        else:
-            from repro.kernels.classify import classify_histogram_batched
-
-            b, hist = classify_histogram_batched(
-                keys, spl, k=k, rows=rows, interpret=interpret
-            )
-        totals = hist.sum(axis=1)  # (B, 2k)
-        if pad_n:
-            # each row's pads are all sentinel keys in one bucket — read it
-            # off the row's first pad position and move the count over
-            totals = totals.at[jnp.arange(B), b[:, n_real]].add(-pad_n)
-        totals = jnp.concatenate(
-            [totals, jnp.full((B, 1), pad_n, jnp.int32)], axis=1
-        ).astype(jnp.int32)
-        off = jnp.concatenate(
-            [jnp.zeros((B, 1), jnp.int32), jnp.cumsum(totals, axis=1)], axis=1
+        dest, off = level_fused_batched(
+            keys, None if clf == "radix" else spl, k=k, n_real=n_real,
+            classifier=clf, rows=rows, interpret=interpret,
         )
-    elif clf == "radix":
+        flat_dest = (dest + n * jnp.arange(B, dtype=jnp.int32)[:, None]).reshape(-1)
+
+        def move(a):
+            fa = a.reshape((B * n,) + a.shape[2:])
+            out = jnp.zeros_like(fa).at[flat_dest].set(fa, mode="promise_in_bounds")
+            return out.reshape(a.shape)
+
+        return jax.tree.map(move, arrays), off, nb, 2 * k
+    if clf == "radix":
         b = radix_bucket_ids(keys, k)
     elif clf == "learned":
         b, _ = learned_bucket_ids_batched(keys, sample, spl, k)
@@ -662,7 +647,7 @@ def batched_level_pass(
         b = jnp.where(is_pad, 2 * k, b)
     arrays, off = batched_stable_partition(
         b, arrays, nb, _auto_tile(n, nb, cfg), engine=engine,
-        offsets=off, interpret=interpret,
+        interpret=interpret,
     )
     return arrays, off, nb, 2 * k
 

@@ -21,12 +21,15 @@ Two interchangeable engines produce that same permutation (DESIGN.md §2):
 
   "xla"     per-tile stable ``argsort`` grouping + prefix sums + one gather
             (O(tile·log tile) comparison sort inside the distribution pass);
-  "pallas"  counting-based rank placement: the fused
-            ``kernels.dispatch_rank.partition_ranks`` kernel computes
-            dest[i] = offsets[b_i] + (#equal-bucket elements before i) with
-            running VMEM counters across the sequential grid — branchless,
-            no comparison sort, exactly the paper's "maintain bucket
-            pointers" discipline.  The payload move is a scatter by dest;
+  "pallas"  the fused rank+histogram kernel
+            (``kernels.level_fused.rank_hist``): one non-sequential grid
+            pass emits tile-local ranks and the per-tile histogram, and a
+            tiny prefix epilogue closes dest[i] = offsets[b_i] +
+            tile_off[t_i, b_i] + rank[i] — branchless, no comparison sort,
+            no bincount glue, and no running counters to serialize the
+            grid (DESIGN.md §10).  The sequential counting-rank kernel
+            (``kernels.dispatch_rank``) remains as the MoE dispatch engine
+            and a tested oracle.  The payload move is a scatter by dest;
             when the caller can guarantee block-homogeneous buckets
             (``partition_blocks``) the faithful in-place block-permutation
             kernel carries the move instead.
@@ -162,21 +165,22 @@ def stable_partition(
     ``engine`` selects how the stable placement is computed:
 
       "xla"     per-tile stable argsort + prefix sums + gather (default);
-      "pallas"  counting-rank kernel + scatter — no comparison sort inside
-                the distribution pass.  ``offsets`` may be supplied when the
-                caller already has the bucket boundaries (e.g. from the
-                fused classify+histogram kernel), saving the bincount.
+      "pallas"  the fused rank+histogram kernel + scatter — no comparison
+                sort inside the distribution pass, no bincount glue (the
+                kernel's histogram yields the boundaries as a by-product).
+                ``offsets`` is accepted for API compatibility but ignored
+                on this path: the fused kernel recomputes identical
+                boundaries for free.
 
     Both engines produce bit-identical results.  Returns
     (reordered pytree, offsets (nb+1,)).
     """
     if engine == "pallas":
-        if offsets is None:
-            totals = jnp.bincount(bucket, length=nb)
-            offsets = jnp.concatenate(
-                [jnp.zeros((1,), jnp.int32), jnp.cumsum(totals).astype(jnp.int32)]
-            )
-        dest = partition_ranks_pallas(bucket, offsets, nb, interpret=interpret)
+        from repro.kernels.level_fused import rank_hist
+
+        dest, offsets = rank_hist(
+            bucket.astype(jnp.int32), nb=nb, interpret=interpret
+        )
         out = jax.tree.map(
             lambda a: jnp.zeros_like(a).at[dest].set(a, mode="promise_in_bounds"),
             arrays,
@@ -209,30 +213,20 @@ def batched_stable_partition(
 
       "xla"     the per-tile-argsort permutation, vmapped over rows (dense
                 jnp ops batch natively);
-      "pallas"  ONE launch of the batch-grid counting-rank kernel
-                (``kernels.dispatch_rank.partition_ranks_batched``) — the
-                running counters reset at each row's first tile — followed
-                by a flat scatter.
+      "pallas"  ONE launch of the batch-grid fused rank+histogram kernel
+                (``kernels.level_fused.rank_hist_batched``) — rows are
+                fully independent, no counter resets exist — followed by
+                a flat scatter.  ``offsets`` is ignored on this path (the
+                kernel recomputes identical boundaries for free).
 
     Both produce the bit-identical per-row stable permutation.
     """
     B, n = bucket.shape
     if engine == "pallas":
-        if offsets is None:
-            totals = jax.vmap(lambda row: jnp.bincount(row, length=nb))(bucket)
-            offsets = jnp.concatenate(
-                [
-                    jnp.zeros((B, 1), jnp.int32),
-                    jnp.cumsum(totals, axis=1).astype(jnp.int32),
-                ],
-                axis=1,
-            )
-        from repro.kernels.dispatch_rank import partition_ranks_batched
+        from repro.kernels.level_fused import rank_hist_batched
 
-        if interpret is None:
-            interpret = _default_interpret()
-        dest = partition_ranks_batched(
-            bucket.astype(jnp.int32), offsets[:, :-1], nb=nb, interpret=interpret
+        dest, offsets = rank_hist_batched(
+            bucket.astype(jnp.int32), nb=nb, interpret=interpret
         )
         # flatten the per-row destinations into one scatter over (B*n, ...)
         flat_dest = (dest + n * jnp.arange(B, dtype=jnp.int32)[:, None]).reshape(-1)
@@ -266,18 +260,20 @@ def partition_blocks(
     consecutive run of ``block_elems`` elements shares one bucket (the
     block_bucket (N,) array gives that bucket per block — e.g. MoE capacity
     blocks, distributed chunk exchange), whole blocks move HBM-in-place via
-    ``kernels.permute_inplace``.  The kernel's moves depend only on
-    (block_bucket, boundaries), so applying it per leaf yields one
-    consistent permutation across the pytree.  The kernel path requires
-    every leaf to be 1-D with ``block_elems`` a multiple of 128; if any
-    leaf is ineligible the whole pytree falls back to a gather by the
-    stable block order (one decision for all leaves — the kernel's
-    permutation is not the stable one, so the two moves must never mix
-    within a pytree).
+    the stable swap-cycle kernel (``kernels.block_permute``): the *stable*
+    block destinations are computed up front (``stable_block_dest``) and
+    the kernel chases the permutation cycles over aliased input/output
+    refs — no second n-sized buffer.  The kernel path requires every leaf
+    to be 1-D with ``block_elems`` a multiple of 128; if any leaf is
+    ineligible the whole pytree falls back to a gather by the stable block
+    order.  Both paths realize the SAME stable permutation, so they are
+    interchangeable per call (the legacy bucket-pointer kernel in
+    ``kernels.permute_inplace``, which is not stable, remains as the
+    faithful-§4.2 reference).
 
     Returns (grouped pytree, (nb+1,) *block*-boundary offsets).
     """
-    from repro.kernels.permute_inplace import permute_blocks_inplace
+    from repro.kernels.block_permute import permute_blocks_by_dest, stable_block_dest
 
     if interpret is None:
         interpret = _default_interpret()
@@ -292,8 +288,9 @@ def partition_blocks(
     )
 
     if kernel_ok:
-        move = lambda a: permute_blocks_inplace(
-            a, block_bucket, d, k=nb, block_elems=block_elems, interpret=interpret
+        dst = stable_block_dest(block_bucket)
+        move = lambda a: permute_blocks_by_dest(
+            a, dst, block_elems=block_elems, interpret=interpret
         )
     else:
         block_order = jnp.argsort(block_bucket, stable=True)

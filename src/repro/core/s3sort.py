@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sampling
-from repro.core.classifier import classify
+from repro.classify import classify
 from repro.core.ips4o import SortConfig, plan_levels
 from repro.core.ref import ref_partition
 

@@ -11,8 +11,6 @@ that instantiation on a device mesh, one exchange level per mesh axis:
                behind the same engine seam and keyspace encoding as
                ``repro.ops``
 
-``core/distributed.py`` remains as a thin compatibility shim over
-:func:`repro.dist.sort`.
 """
 from repro.dist.api import argsort, bottomk, group_by, sort, topk
 from repro.dist.levels import Level, plan_schedule

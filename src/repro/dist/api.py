@@ -16,7 +16,7 @@ the plan cache (capacity factor × oversampling × engine learned per
                    single-shard finish — replicated (k,) results
   group_by         multi-level sort + per-shard run boundaries
 
-Sharded results follow the ``core/distributed.py`` contract: each shard
+Sharded results follow the original distributed-sort contract: each shard
 holds its sorted range padded to capacity with sentinels, plus a valid
 count per shard and an overflow flag (raised only after every re-split
 retry failed — the last resort, not the first response).

@@ -64,7 +64,7 @@ def normalize_axes(axes: AxisNames) -> Tuple[str, ...]:
 def default_oversample(n_total: int) -> int:
     """Per-shard sample size: the paper's alpha scaled for the distributed
     setting (splitters must be good enough that no retry is the common
-    case), as seeded by ``core/distributed.py``."""
+    case)."""
     return max(32, sampling.oversampling_factor(n_total) * 16)
 
 

@@ -68,14 +68,13 @@ LANES = 128
 
 
 def default_rows(n: int, key_bytes: int, k: int) -> int:
-    """Largest roofline row candidate whose tile (rows*128) divides ``n``,
-    or 0 when n is not 128-aligned (callers then stay on the XLA path)."""
-    from repro.launch.roofline import classify_tile_rows
+    """Largest launch-spec row candidate whose tile (rows*128) divides
+    ``n``, or 0 when no candidate does (callers then stay on the XLA
+    path).  One ``KernelLaunchSpec`` resolution, shared with every other
+    sort kernel (``launch.roofline.launch_spec``)."""
+    from repro.launch.roofline import launch_spec
 
-    for rows in classify_tile_rows(key_bytes, k):
-        if n % (rows * LANES) == 0:
-            return rows
-    return 0
+    return launch_spec("classify", key_bytes, k, n=n).rows
 
 
 def _kernel(keys_ref, spl_ref, bucket_ref, hist_ref, *, k: int, nb: int):

@@ -18,8 +18,12 @@ Two variants:
     the per-bucket base lookup is an unrolled scalar loop.
   * ``partition_ranks``: nb up to hundreds of buckets (the sort hot path's
     2k+1) — counters are a VMEM (1, nb) vector and the base lookup is a
-    one-hot contraction, so nothing unrolls over nb.  This is the "pallas"
-    partition engine of ``core.partition.stable_partition``.
+    one-hot contraction, so nothing unrolls over nb.  Formerly the
+    "pallas" partition engine of ``core.partition.stable_partition``; the
+    fused level kernel (``kernels.level_fused``, DESIGN.md §10) demoted it
+    to the MoE dispatch engine and a sequential-counter oracle — its
+    running counters serialize the grid, where the fused kernel's
+    tile-local ranks + prefix epilogue do not.
 
 ``partition_ranks_batched`` (DESIGN.md §6) lifts the second variant over a
 leading batch dimension with a *batch grid dimension*: grid =
@@ -43,6 +47,14 @@ from repro.kernels import resolve_interpret
 __all__ = ["dispatch_ranks", "partition_ranks", "partition_ranks_batched"]
 
 LANES = 128
+
+
+def _default_rank_rows(nb: int) -> int:
+    """Tile rows from the unified launch spec (kind ``"rank"``; the spec's
+    ``k`` is nb here), floored at the legacy 8 for degenerate budgets."""
+    from repro.launch.roofline import launch_spec
+
+    return launch_spec("rank", 4, nb).rows or 8
 
 
 def _kernel(start_ref, eid_ref, dest_ref, run_ref, *, num_experts: int, rows: int):
@@ -77,7 +89,7 @@ def dispatch_ranks(
     expert_start: jax.Array,
     *,
     num_experts: int,
-    rows: int = 8,
+    rows: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Destination slot per token for expert-major grouping.
@@ -85,12 +97,18 @@ def dispatch_ranks(
     Args:
       expert_id: (n,) int32 in [0, num_experts); n multiple of rows*128.
       expert_start: (num_experts,) int32 exclusive prefix of expert counts.
+      rows: tile rows; None takes the largest unified-launch-spec
+        candidate whose tile divides n (legacy 8 when none does).
 
     Returns (n,) int32 destinations (a permutation when starts come from the
     true histogram).
     """
     interpret = resolve_interpret(interpret)
     n = expert_id.shape[0]
+    if rows is None:
+        from repro.launch.roofline import launch_spec
+
+        rows = launch_spec("rank", 4, num_experts, n=n).rows or 8
     tile = rows * LANES
     if n % tile:
         raise ValueError(f"n={n} not a multiple of tile={tile}")
@@ -138,7 +156,7 @@ def partition_ranks(
     start: jax.Array,
     *,
     nb: int,
-    rows: int = 8,
+    rows: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Stable counting destination per element, vectorized over buckets.
@@ -149,6 +167,8 @@ def partition_ranks(
         wrapper layers use id ``nb`` as alignment padding).
       start: (nb,) int32 exclusive prefix of bucket counts.
       nb: number of buckets (static).
+      rows: tile rows; None derives the unified launch spec's candidate
+        (the kernel self-pads, so any tile fits any n).
 
     Returns (n,) int32 destinations: ``start[b_i]`` + the number of earlier
     elements with the same bucket — the stable partition permutation's
@@ -156,6 +176,8 @@ def partition_ranks(
     """
     interpret = resolve_interpret(interpret)
     n = bucket.shape[0]
+    if rows is None:
+        rows = _default_rank_rows(nb)
     tile = rows * LANES
     n_pad = -(-n // tile) * tile
     if n_pad != n:  # align to the kernel tile; pads use the out-of-range id
@@ -204,7 +226,7 @@ def partition_ranks_batched(
     start: jax.Array,
     *,
     nb: int,
-    rows: int = 8,
+    rows: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Per-row stable counting destinations, batch grid dimension (B, tiles).
@@ -222,6 +244,8 @@ def partition_ranks_batched(
     """
     interpret = resolve_interpret(interpret)
     B, n = bucket.shape
+    if rows is None:
+        rows = _default_rank_rows(nb)
     tile = rows * LANES
     n_pad = -(-n // tile) * tile
     if n_pad != n:  # align rows to the kernel tile; pads use the trash id

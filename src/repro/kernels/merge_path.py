@@ -13,13 +13,20 @@ The TPU formulation splits the work in two branch-free stages:
      one fori_loop of ceil(log2 nA)+1 dense gather steps, no kernel needed.
   2. **In-tile merge** (the Pallas kernel): tile t owns output range
      [d_t, d_{t+1}) which merge-path guarantees is exactly
-     A[ia:ia+la] ++ B[ja:ja+lb].  Each element's in-tile destination is its
-     cross-rank, computed by a dense (T, T) broadcast compare — strict
-     ``<`` counting B-before-A and ``<=`` counting A-before-B, the same
-     tie discipline as the partition — and the output permutation
-     materializes through a one-hot contraction.  Zero gathers, zero
-     divergence: the merge analogue of the classify kernel's
-     "lane-parallel dense compare instead of pointer chase".
+     A[ia:ia+la] ++ B[ja:ja+lb].  The two windows are merged by a
+     branchless **bitonic merger**: window A ascending ++ window B
+     *reversed* is a bitonic sequence of 2T (key, src) pairs, so
+     log2(2T) compare-exchange rounds — each a dense VPU select at
+     distance d = T..1, the same static-reshape idiom as
+     ``kernels.bitonic`` — sort it ascending.  Ranking is lexicographic
+     on (key, src) with every A source index (< nA) below every B source
+     index (>= nA), which realizes the stable tie rule *exactly* (ties to
+     A, order preserved within runs) with no tie-epsilon.  Lanes beyond
+     la/lb mask to (sentinel key, 2^30 src) and sink to the tail.  Versus
+     the previous dense (T, T) cross-rank compare + one-hot contraction,
+     the merger does O(T log T) work instead of O(T^2) — at T = 256
+     that is ~18 dense ops on 2T lanes instead of ~2 on T^2 cells, an
+     ~8x compute drop, and the win grows linearly in T.
 
 The kernel emits a *permutation* (int32 source index into ``A ++ B``), not
 merged keys: the wrapper layers (``repro.stream.merge``) gather keys and
@@ -29,24 +36,41 @@ trivially stable for (key, payload) rows.
 Per-tile scalars (window starts/lengths) ride in as a (num_tiles, 4) array
 consumed through a per-tile BlockSpec — the same idiom as flash_decode's
 ``length`` operand — and the windows themselves are dynamic ``pl.ds``
-slices of the full (VMEM-resident) runs.  VMEM budget: both runs + the
-(T, T) compare/one-hot intermediates (T=256: ~0.5 MiB), which bounds a
-single kernel launch to runs of a few MiB; the streaming layer's pairwise
-passes keep individual merges under that by construction, and interpret
-mode (this container) has no such limit.
+slices of the full (VMEM-resident) runs.  The default T comes from the
+unified ``launch.roofline.KernelLaunchSpec`` (kind ``"merge"``); the
+stream plan cache sweeps the spec's candidate tiles.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels import resolve_interpret
 
-__all__ = ["merge_path_partition", "merge_path_perm"]
+__all__ = ["merge_path_partition", "merge_path_perm", "merge_rows"]
+
+
+def _sentinel_np(dtype):
+    """Largest representable value as a *numpy* scalar (static kernel
+    parameter — a traced ``sampling.sentinel_for`` would be a captured
+    constant, which pallas_call rejects)."""
+    dtype = np.dtype(dtype)
+    if np.issubdtype(dtype, np.floating):
+        return dtype.type(np.finfo(dtype).max)
+    return dtype.type(np.iinfo(dtype).max)
+
+
+def merge_rows(key_bytes: int) -> int:
+    """Default merge tile rows from the unified launch spec."""
+    from repro.launch.roofline import launch_spec
+
+    return launch_spec("merge", key_bytes).rows
 
 
 def merge_path_partition(a: jax.Array, b: jax.Array, d: jax.Array) -> jax.Array:
@@ -81,34 +105,52 @@ def merge_path_partition(a: jax.Array, b: jax.Array, d: jax.Array) -> jax.Array:
     return lo
 
 
-def _merge_kernel(meta_ref, a_ref, b_ref, perm_ref, *, T: int, nA: int):
+# masked lanes sink past every real (key, src) pair: the key is the dtype
+# sentinel (>= all keys) and the src outranks any real source index
+_PAD_SRC = 1 << 30
+
+
+def _merge_exchange(k, s, d: int, W: int):
+    """One always-ascending merger round at distance ``d``: partner =
+    idx ^ d via the static (W/2d, 2, d) reshape; swap on lexicographic
+    (key, src) greater-than."""
+    shape = (W // (2 * d), 2, d)
+    k3, s3 = k.reshape(shape), s.reshape(shape)
+    (k_lo, s_lo), (k_hi, s_hi) = (k3[:, 0], s3[:, 0]), (k3[:, 1], s3[:, 1])
+    swap = (k_lo > k_hi) | ((k_lo == k_hi) & (s_lo > s_hi))
+    k = jnp.stack(
+        [jnp.where(swap, k_hi, k_lo), jnp.where(swap, k_lo, k_hi)], axis=1
+    ).reshape(W)
+    s = jnp.stack(
+        [jnp.where(swap, s_hi, s_lo), jnp.where(swap, s_lo, s_hi)], axis=1
+    ).reshape(W)
+    return k, s
+
+
+def _merge_kernel(meta_ref, a_ref, b_ref, perm_ref, *, T: int, nA: int, sent):
     ia = meta_ref[0, 0]  # A window start
     ja = meta_ref[0, 1]  # B window start
     la = meta_ref[0, 2]  # A elements owned by this tile
     lb = meta_ref[0, 3]  # B elements owned by this tile
     aw = a_ref[0, pl.ds(ia, T)]  # (T,) — only the first la lanes are real
     bw = b_ref[0, pl.ds(ja, T)]
-    av = aw[:, None]  # (T, 1)
-    bv = bw[None, :]  # (1, T)
-    p_col = jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0)  # local A index
-    q_row = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)  # local B index
-    valid_a = p_col < la
-    valid_b = q_row < lb
-    # cross-ranks, same tie rule as the diagonal partition: B precedes A
-    # only strictly (<), A precedes B on ties (<=)
-    b_before_a = jnp.sum(((bv < av) & valid_b).astype(jnp.int32), axis=1)  # (T,)
-    a_before_b = jnp.sum(((av <= bv) & valid_a).astype(jnp.int32), axis=0)  # (T,)
-    dest_a = p_col[:, 0] + b_before_a  # in-tile output slot of A[ia+p]
-    dest_b = q_row[0, :] + a_before_b  # in-tile output slot of B[ja+q]
-    # one-hot contraction: perm[r] = global source index of output slot r
-    # (slots r >= la+lb — final tile only — stay 0 and are sliced off)
-    oh_a = ((dest_a[:, None] == q_row) & valid_a).astype(jnp.int32)  # (T, T)
-    oh_b = ((dest_b[:, None] == q_row) & (p_col < lb)).astype(jnp.int32)
-    src_a = ia + p_col[:, 0]
-    src_b = nA + ja + p_col[:, 0]
-    perm_ref[0, :] = jnp.sum(oh_a * src_a[:, None], axis=0) + jnp.sum(
-        oh_b * src_b[:, None], axis=0
-    )
+    p = jax.lax.iota(jnp.int32, T)  # local window index
+    # (key, src) pairs; src orders A (< nA) wholly before B (>= nA), and by
+    # run position within each — lexicographic sort == the stable merge
+    ka = jnp.where(p < la, aw, sent)
+    sa = jnp.where(p < la, ia + p, _PAD_SRC)
+    kb = jnp.where(p < lb, bw, sent)
+    sb = jnp.where(p < lb, nA + ja + p, _PAD_SRC)
+    # A ascending ++ B reversed (descending) is bitonic in (key, src):
+    # within a run src ascends with key, and A-pads/B-pads sit at the
+    # sequence's two ends' tails where monotonicity is preserved
+    k = jnp.concatenate([ka, kb[::-1]])
+    s = jnp.concatenate([sa, sb[::-1]])
+    for dp in range(int(math.log2(2 * T)) - 1, -1, -1):
+        k, s = _merge_exchange(k, s, 1 << dp, 2 * T)
+    # first T sorted srcs are this tile's outputs (slots >= la+lb — final
+    # tile only — hold pad srcs and are sliced off by the wrapper)
+    perm_ref[0, :] = s[:T]
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
@@ -116,7 +158,7 @@ def merge_path_perm(
     a: jax.Array,
     b: jax.Array,
     *,
-    tile: int = 256,
+    tile: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Stable-merge permutation of two sorted runs.
@@ -125,7 +167,9 @@ def merge_path_perm(
       a, b: 1-D sorted arrays of one dtype, totally ordered under ``<=``
         (raw NaNs are the callers' concern — ``repro.stream`` passes
         keyspace-encoded keys, exactly like the sort entry points).
-      tile: output elements per grid step (the merge-path T).
+      tile: output elements per grid step (the merge-path T; power of two
+        — the in-tile bitonic merger runs log2(2T) rounds).  None derives
+        the ``KernelLaunchSpec`` default for this key width.
       interpret: shared off-TPU policy via ``kernels.resolve_interpret``.
 
     Returns ``perm`` (nA+nB,) int32 with ``concat(a, b)[perm]`` equal to
@@ -137,6 +181,12 @@ def merge_path_perm(
     interpret = resolve_interpret(interpret)
     nA, nB = a.shape[0], b.shape[0]
     n = nA + nB
+    if tile is None:
+        tile = merge_rows(a.dtype.itemsize) * 128
+    if tile & (tile - 1):
+        raise ValueError(f"tile={tile} must be a power of two")
+    if n >= _PAD_SRC:
+        raise ValueError("runs too long for the int32 source encoding")
     if nA == 0 or nB == 0:  # nothing to interleave
         return jnp.arange(n, dtype=jnp.int32)
     num_tiles = -(-n // tile)
@@ -154,7 +204,7 @@ def merge_path_perm(
     bp = jnp.pad(b, (0, tile)).reshape(1, Lb)
 
     perm = pl.pallas_call(
-        functools.partial(_merge_kernel, T=tile, nA=nA),
+        functools.partial(_merge_kernel, T=tile, nA=nA, sent=_sentinel_np(a.dtype)),
         grid=(num_tiles,),
         in_specs=[
             pl.BlockSpec((1, 4), lambda t: (t, 0)),  # per-tile scalars

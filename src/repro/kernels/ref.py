@@ -6,7 +6,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.classifier import classify as _tree_classify
+from repro.classify import classify as _tree_classify
 
 __all__ = [
     "classify_histogram_ref",

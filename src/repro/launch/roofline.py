@@ -23,7 +23,8 @@ from dataclasses import asdict, dataclass, field
 from typing import Dict, Optional
 
 __all__ = ["HW", "collective_bytes", "roofline_terms", "RooflineReport",
-           "model_flops", "classify_tile_rows"]
+           "model_flops", "classify_tile_rows", "KernelLaunchSpec",
+           "launch_spec", "spec_candidates"]
 
 # TPU v5e per chip
 HW = {
@@ -35,13 +36,153 @@ HW = {
     "vmem_bytes": 16 * 2**20,   # VMEM per core — the Pallas tile budget
 }
 
-# classify-kernel tile model (kernels/classify.py): lanes per VPU row, the
-# VMEM fraction a double-buffered kernel may claim for one grid step, and
-# the largest row count worth scheduling (past it the grid has too few
-# steps to pipeline).
+# unified kernel-launch model: lanes per VPU row, the VMEM fraction a
+# double-buffered kernel may claim for one grid step, and the largest row
+# count worth scheduling (past it the grid has too few steps to pipeline).
 _CLASSIFY_LANES = 128
 _CLASSIFY_VMEM_FRACTION = 3   # 1/3: input double-buffer + in-flight outputs
 _CLASSIFY_MAX_ROWS = 128
+
+
+@dataclass(frozen=True)
+class KernelLaunchSpec:
+    """One launch contract shared by every sort kernel (DESIGN.md §10).
+
+    Each Pallas sort kernel used to pick its own tile shape with its own
+    ad-hoc constant (classify: roofline rows, dispatch_rank: ``rows=8``,
+    merge_path: ``tile=256``).  A :class:`KernelLaunchSpec` replaces the
+    three code paths with one derivation: ``kind`` names the kernel's
+    per-row working-set model, ``rows`` x ``lanes`` is the grid-step tile,
+    ``vmem_budget`` is the bytes one grid step may claim (the VMEM budget
+    already divided by ``double_buffer`` in-flight copies), and
+    ``interpret`` is the shared off-TPU policy (``None`` resolves through
+    ``kernels.resolve_interpret``).  ``rows == 0`` means no candidate tile
+    divides the requested ``n`` — callers then stay on their XLA path.
+    """
+
+    kind: str
+    rows: int
+    lanes: int = _CLASSIFY_LANES
+    vmem_budget: int = HW["vmem_bytes"] // _CLASSIFY_VMEM_FRACTION
+    double_buffer: int = 2
+    interpret: Optional[bool] = None
+
+    @property
+    def tile(self) -> int:
+        """Elements per grid step."""
+        return self.rows * self.lanes
+
+    def resolve_interpret(self) -> bool:
+        from repro.kernels import resolve_interpret
+
+        return resolve_interpret(self.interpret)
+
+
+def _bytes_per_row(kind: str, key_bytes: int, k: Optional[int]) -> int:
+    """VMEM bytes one tile row of 128 lanes costs in kernel ``kind``.
+
+    The models count the resident operands plus the dominant broadcast
+    intermediate of each kernel body:
+
+      classify     keys + (lanes, 2k) int32 compare/one-hot + bucket out
+      rank         int32 bucket ids + (lanes, nb) one-hot + rank/dest out
+      level_fused  classify AND rank in one body: keys + one-hot against
+                   nb = 2k+1 + bucket/rank outputs
+      merge        two (key, int32 src) sequences of the double window
+      permute      two swap buffers of block rows
+    """
+    L = _CLASSIFY_LANES
+    if kind == "classify":
+        return L * (key_bytes + 4 * (2 * k) + 4)
+    if kind == "rank":
+        return L * (4 + 4 * k + 4)          # k is nb here
+    if kind == "level_fused":
+        return L * (key_bytes + 4 * (2 * k + 1) + 8)
+    if kind == "merge":
+        return L * 4 * (key_bytes + 4)       # (key, src) x in/out staging
+    if kind == "permute":
+        return L * 2 * key_bytes             # the two swap buffers
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+_MAX_ROWS = {
+    "classify": _CLASSIFY_MAX_ROWS,
+    "rank": _CLASSIFY_MAX_ROWS,
+    "level_fused": _CLASSIFY_MAX_ROWS,
+    "merge": 8,       # merge-path T = rows*128; diagonals grow linearly in T
+    "permute": 64,    # block_elems = rows*128
+}
+
+
+def spec_candidates(
+    kind: str,
+    key_bytes: int,
+    k: Optional[int] = None,
+    *,
+    vmem_bytes: Optional[int] = None,
+    max_rows: Optional[int] = None,
+) -> tuple:
+    """Descending power-of-two row-count candidates for kernel ``kind``.
+
+    The largest candidate is the biggest power of two whose working set
+    (``_bytes_per_row`` x rows) fits the per-step VMEM budget (one
+    ``_CLASSIFY_VMEM_FRACTION``-th of VMEM: input double-buffer plus
+    in-flight outputs); the tail enumerates down to one row so callers can
+    pick the largest candidate dividing their n and the plan cache can
+    sweep the leading entries.
+    """
+    budget = (HW["vmem_bytes"] if vmem_bytes is None else vmem_bytes)
+    budget //= _CLASSIFY_VMEM_FRACTION
+    per_row = _bytes_per_row(kind, key_bytes, k)
+    cap = _MAX_ROWS[kind] if max_rows is None else max_rows
+    rows = 1
+    while rows * 2 <= cap and (rows * 2) * per_row <= budget:
+        rows *= 2
+    out = []
+    while rows >= 1:
+        out.append(rows)
+        rows //= 2
+    return tuple(out)
+
+
+def launch_spec(
+    kind: str,
+    key_bytes: int,
+    k: Optional[int] = None,
+    *,
+    n: Optional[int] = None,
+    rows: Optional[int] = None,
+    vmem_bytes: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> KernelLaunchSpec:
+    """The one tile-shape derivation every sort kernel launches through.
+
+    ``rows`` pins a swept value (the plan-cache autotune dimension);
+    otherwise the largest :func:`spec_candidates` entry wins, filtered to
+    tiles dividing ``n`` when given (``rows == 0`` in the returned spec
+    when none divides — n not 128-aligned — and the caller stays on XLA).
+
+    >>> launch_spec("classify", 4, 128).rows
+    32
+    >>> launch_spec("merge", 4).tile
+    1024
+    >>> launch_spec("classify", 4, 128, n=1000).rows
+    0
+    """
+    budget = (HW["vmem_bytes"] if vmem_bytes is None else vmem_bytes)
+    budget //= _CLASSIFY_VMEM_FRACTION
+    cands = spec_candidates(kind, key_bytes, k, vmem_bytes=vmem_bytes)
+    if rows is None:
+        rows = 0
+        for cand in cands:
+            if n is None or n % (cand * _CLASSIFY_LANES) == 0:
+                rows = cand
+                break
+    elif n is not None and n % (rows * _CLASSIFY_LANES):
+        rows = 0
+    return KernelLaunchSpec(
+        kind=kind, rows=rows, vmem_budget=budget, interpret=interpret
+    )
 
 
 def classify_tile_rows(
@@ -65,24 +206,17 @@ def classify_tile_rows(
     candidate tuple; the plan cache sweeps the leading entries and the
     level pass picks the largest candidate dividing n.  At the defaults
     (f32/u32 keys, k = 128, 16 MiB VMEM) this reproduces the previously
-    hard-coded 32 rows.
+    hard-coded 32 rows.  This is the ``kind="classify"`` projection of
+    :func:`spec_candidates`, kept as the stable entry point.
 
     >>> classify_tile_rows(4, 128)[0]
     32
     >>> classify_tile_rows(4, 32)[0] > classify_tile_rows(8, 256)[0]
     True
     """
-    budget = (HW["vmem_bytes"] if vmem_bytes is None else vmem_bytes)
-    budget //= _CLASSIFY_VMEM_FRACTION
-    per_row = _CLASSIFY_LANES * (key_bytes + 4 * (2 * k) + 4)
-    rows = 1
-    while rows * 2 <= max_rows and (rows * 2) * per_row <= budget:
-        rows *= 2
-    out = []
-    while rows >= 1:
-        out.append(rows)
-        rows //= 2
-    return tuple(out)
+    return spec_candidates(
+        "classify", key_bytes, k, vmem_bytes=vmem_bytes, max_rows=max_rows
+    )
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -8,7 +8,7 @@ sorted — which is exactly the regime grouping ops live in.
 Static shapes: JAX cannot return data-dependent lengths, so the per-group
 outputs (``unique`` values, counts, run lengths) come back padded to n
 with a scalar count of the valid prefix, mirroring the static-shape
-conventions used elsewhere in the repo (e.g. ``core.distributed``).
+conventions used elsewhere in the repo (e.g. ``repro.dist``).
 
 ``group_by`` has three interchangeable engines:
   * ``"partition"`` — keys are small ints in [0, num_groups): one stable

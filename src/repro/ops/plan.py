@@ -147,9 +147,10 @@ def _candidates(n: int, engines: tuple = ("xla",), itemsize: int = 4) -> list:
     is already every grid point's classifier; learned is raced separately
     by ``classifier_plan``, where the draw's distribution is controlled),
     and the "pallas" engine adds one off-default ``classify_rows`` point
-    from the roofline candidate list (``launch.roofline
-    .classify_tile_rows`` at this ``itemsize``) so the fused-kernel tile
-    shape is swept, not assumed.
+    from the unified launch-spec candidate list
+    (``launch.roofline.spec_candidates`` for the ``"level_fused"`` kernel
+    kind at this ``itemsize``) so the fused level kernel's tile shape is
+    swept, not assumed.
     """
     out = []
     for base_case, tile in [(8192, 4096), (8192, 2048), (4096, 2048), (16384, 4096)]:
@@ -165,9 +166,9 @@ def _candidates(n: int, engines: tuple = ("xla",), itemsize: int = 4) -> list:
         for slack in (8, 4):
             trial.append(SortConfig(slack=slack, engine="pallas"))
         trial.append(SortConfig(engine="pallas", classifier="radix"))
-        from repro.launch.roofline import classify_tile_rows
+        from repro.launch.roofline import spec_candidates
 
-        rows = classify_tile_rows(itemsize, SortConfig().kmax)
+        rows = spec_candidates("level_fused", itemsize, SortConfig().kmax)
         if len(rows) > 1:
             trial.append(SortConfig(engine="pallas", classify_rows=rows[1]))
     for cfg in trial:
@@ -218,9 +219,12 @@ class StreamPlan:
     engine: str = "xla"
 
 
-# merge-path tiles the stream autotune sweeps (the kernel's (T, T) rank
-# matrix bounds the useful range)
-_STREAM_TILES = (128, 256, 512)
+def _stream_tiles() -> tuple:
+    """Merge-path tiles the stream autotune sweeps: the unified launch
+    spec's candidate rows for the ``"merge"`` kernel kind (x128 lanes)."""
+    from repro.launch.roofline import spec_candidates
+
+    return tuple(r * 128 for r in spec_candidates("merge", 4))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -594,7 +598,7 @@ class PlanCache:
             b = jnp.asarray(np.sort(draw[chunk:]))
         best, best_t = StreamPlan(chunk, fanin), float("inf")
         for eng in _engines_for(chunk):
-            for tile in _STREAM_TILES:
+            for tile in _stream_tiles():
                 f = jax.jit(
                     lambda x, e=eng, t=tile: _merge([x, b], engine=e, tile=t)
                 )

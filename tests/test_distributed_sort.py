@@ -14,7 +14,7 @@ _SCRIPT = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
-    from repro.core.distributed import distributed_sort
+    from repro.dist import sort as distributed_sort
     from repro.core.ips4o import SortConfig
     from repro.data.distributions import make_input
 
@@ -92,7 +92,7 @@ _SCRIPT = textwrap.dedent(
 
 
 def test_capacity_overflow_truncates_deterministically():
-    """ISSUE 4 satellite: the capacity-overflow path of core/distributed.py
+    """ISSUE 4 satellite: the capacity-overflow path of repro.dist.sort
     (in-process via the degenerate d == 1 mesh, which shares the overflow
     contract of the d > 1 exchange: flag set, deterministic truncation to
     ``capacity``, output still sorted — never UB-shaped output)."""
@@ -101,7 +101,7 @@ def test_capacity_overflow_truncates_deterministically():
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.core.distributed import distributed_sort
+    from repro.dist import sort as distributed_sort
     from repro.core.ips4o import SortConfig
     from repro.data.distributions import make_input
 

@@ -6,7 +6,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.classifier import classify
+from repro.classify import classify
 from repro.core.ips4o import SortConfig, ips4o_sort
 from repro.core.partition import stable_partition
 from repro.core.ref import ref_partition
