@@ -39,12 +39,16 @@ from typing import Any, Dict, Iterable, List, Tuple
 _TRACKED_EXACT = {"s_per_call", "us", "t"}
 _TRACKED_SUFFIX = ("_us", "ns_per_elem")
 # reference-implementation timings (the comparison column of a bench, e.g.
-# loop-over-rows or the single-shot sort): their variance is not a product
-# regression — the engine column of the same row is what the gate tracks
-_REFERENCE_METRICS = {"loop_us", "single_us"}
-# derived / environment fields: not metrics, not identity
+# loop-over-rows, the single-shot sort, or jnp.lexsort): their variance is
+# not a product regression — the engine column of the same row is what the
+# gate tracks
+_REFERENCE_METRICS = {"loop_us", "single_us", "lexsort_us"}
+# derived / environment fields: not metrics, not identity (the _bytes /
+# _flops families are the static observability columns of compiled_cost)
 _IGNORED_EXACT = {"speedup", "ratio", "meps", "speedup_vs_1dev"} | _REFERENCE_METRICS
-_IGNORED_SUFFIX = ("_meps", "_bytes", "_bytes_per_dev", "_per_dev", "_ratio")
+_IGNORED_SUFFIX = (
+    "_meps", "_bytes", "_bytes_per_dev", "_per_dev", "_ratio", "_flops"
+)
 
 
 def is_tracked_metric(field: str) -> bool:

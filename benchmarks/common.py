@@ -15,9 +15,53 @@ from typing import Any, Callable, Dict, Iterable, List
 import jax
 import numpy as np
 
-__all__ = ["bench", "Row", "emit", "emit_json", "check_sorted"]
+__all__ = ["bench", "Row", "emit", "emit_json", "check_sorted", "compiled_cost"]
 
 Row = Dict[str, Any]
+
+
+def compiled_cost(fn: Callable[..., Any], *args: Any):
+    """AOT-compile ``fn(*args)`` and capture its static cost profile.
+
+    Returns ``(nullary, row)``: a nullary callable running the compiled
+    executable (feed it to :func:`bench`) and a Row of observability
+    columns — the XLA memory watermark (``mem_temp_bytes`` /
+    ``mem_arg_bytes`` / ``mem_out_bytes`` / ``mem_peak_bytes``, from
+    ``compiled.memory_analysis()``) and the analytic HLO cost
+    (``hlo_flops`` / ``hlo_bytes``, via the same
+    ``repro.launch.hlo_cost.analyze_hlo`` the roofline dry-run uses).
+    Every column is gate-neutral (byte/flop suffixes are neither identity
+    nor tracked metrics in check_regression); fields a backend doesn't
+    report are simply absent.
+    """
+    compiled = jax.jit(fn).lower(*args).compile()
+    row: Row = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    if ma is not None:
+        peak = 0
+        for attr, col in (
+            ("temp_size_in_bytes", "mem_temp_bytes"),
+            ("argument_size_in_bytes", "mem_arg_bytes"),
+            ("output_size_in_bytes", "mem_out_bytes"),
+        ):
+            v = getattr(ma, attr, None)
+            if isinstance(v, (int, float)):
+                row[col] = int(v)
+                peak += int(v)
+        if row:
+            row["mem_peak_bytes"] = peak
+    try:
+        from repro.launch.hlo_cost import analyze_hlo
+
+        cost = analyze_hlo(compiled.as_text())
+        row["hlo_flops"] = float(cost.flops)
+        row["hlo_bytes"] = float(cost.bytes)
+    except Exception:
+        pass
+    return (lambda: compiled(*args)), row
 
 
 def bench(

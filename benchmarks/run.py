@@ -11,6 +11,7 @@
   sort_external      DESIGN.md §7     external_sort vs single-shot + merge
   sort_distributed   DESIGN.md §8     multi-level mesh sort, volume per level
   sort_classifier    DESIGN.md §9     classifier engines: tree/radix/learned/auto
+  sort_records       DESIGN.md §11    workload zoo: string / composite records
 
 ``python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`` prints one
 CSV block per table plus a Table-1-style summary, and writes every row to
@@ -36,6 +37,7 @@ MODULES = [
     "sort_external",
     "sort_distributed",
     "sort_classifier",
+    "sort_records",
 ]
 
 

@@ -1,0 +1,69 @@
+"""Record-sorting bench: the workload zoo through the multi-word path.
+
+One row per (dataset family x classifier): wall clock and throughput of
+``ops.argsort_records`` over the MSD tie-break schedule (DESIGN.md §11),
+with a ``jnp.lexsort`` reference column and the static observability
+columns from :func:`benchmarks.common.compiled_cost` — memory watermark
+(XLA's compiled memory_analysis) and analytic HLO flops/bytes — so the
+perf trajectory of the record path is visible in byte/flop terms, not
+just machine-relative wall clocks.
+
+Output is parity-asserted against the independent numpy oracle
+(``datasets.oracle_argsort``) before anything is timed.  String families
+are width-clipped so the word count stays at W=2 (the tie-heavy regime);
+composite families are W=3 by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import ops
+from repro.core.ips4o import SortConfig
+from repro.data import datasets
+
+from benchmarks.common import Row, bench, compiled_cost
+
+_CFG = SortConfig()
+_WIDTH = 8  # byte clip for string families: W=2
+CLASSIFIERS = ["radix", "auto"]
+CLASSIFIERS_FULL = ["tree", "radix", "auto"]
+
+
+def _make(name: str, n: int) -> datasets.Dataset:
+    width = _WIDTH if name in ("RnaSequences", "UrlPaths") else None
+    return datasets.make_dataset(name, n, seed=0, width=width)
+
+
+def run(quick: bool = False):
+    n = 1 << 14 if quick else 1 << 16
+    classifiers = CLASSIFIERS if quick else CLASSIFIERS_FULL
+    rows: list[Row] = []
+    for name in sorted(datasets.DATASETS):
+        ds = _make(name, n)
+        words = jnp.asarray(ds.words)
+        want = datasets.oracle_argsort(ds)
+        lex_cols = tuple(
+            reversed([ops.keyspace.encode(words[:, j]) for j in range(ds.spec.words)])
+        )
+        lex_fn = jax.jit(lambda *c: jnp.lexsort(c))
+        lex_s = bench(lambda: lex_fn(*lex_cols))
+        for clf in classifiers:
+            fn = lambda w: ops.argsort_records(w, cfg=_CFG, classifier=clf)
+            got = np.asarray(fn(words))
+            np.testing.assert_array_equal(got, want)  # parity before timing
+            call, cost = compiled_cost(fn, words)
+            s = bench(call)
+            row: Row = {
+                "dataset": name,
+                "n": n,
+                "W": ds.spec.words,
+                "classifier": clf,
+                "s_per_call": round(s, 6),
+                "meps": round(n / s / 1e6, 1),
+                "lexsort_us": round(lex_s * 1e6, 1),
+            }
+            row.update(cost)
+            rows.append(row)
+    return rows

@@ -20,8 +20,15 @@ Structure (see DESIGN.md §4 for the full mapping from the paper):
     final bucket — the analogue of the paper's overflow block.
 
 The returned permutation is value-exact vs. ``ref_sort`` (stable) for keys;
-payload association is exact per element (the base-case window sort is not
-stable across equal (bucket, key) pairs, like the paper's base case).
+payload association is exact per element.  The permutation is **stable**:
+every stage preserves the relative order of equal keys — the block
+partition is stable by construction, equality buckets keep their input
+order, the base-case ``_window_perm`` is a stable lexicographic
+(bucket, key) sort and the overlapped windows never exchange equal
+elements, and the robustness fallback is ``jnp.argsort(stable=True)``.
+``tiebreak_passes`` (multi-word keys, DESIGN.md §11) and the differential
+fuzz harness (``tests/test_fuzz_differential.py``) rely on this and pin it
+against the numpy stable-argsort oracle.
 
 Keys must form a total order under ``>`` / ``==`` at this level (raw NaNs
 are rejected by that contract); the ``repro.ops`` entry points remove the
@@ -85,6 +92,7 @@ __all__ = [
     "bucket_violations",
     "segment_ids",
     "stable_full_sort",
+    "tiebreak_passes",
     # batch-axis-native pipeline, consumed by ``repro.ops.batched`` (§6)
     "ips4o_sort_batched",
     "batched_pad_with_sentinel",
@@ -833,6 +841,80 @@ def ips4o_sort(
     if values is None:
         return out_k
     return out_k, jax.tree.map(lambda a: a[:n], arrays["v"])
+
+
+def tiebreak_passes(
+    cols: Sequence[jax.Array],
+    values: Any = None,
+    cfg: SortConfig = SortConfig(),
+) -> Tuple[List[jax.Array], Any]:
+    """MSD tie-break level schedule over multi-word keys (DESIGN.md §11).
+
+    ``cols`` is the word decomposition of each row's key, most significant
+    first (word 0): W arrays of shape (n,) whose dtypes form a total order
+    under ``>`` / ``==`` (the ``repro.ops`` callers pass keyspace-encoded
+    uint words).  Rows end up in **stable lexicographic order** — the
+    permutation is bit-identical to ``np.lexsort`` over the columns —
+    relying on the stability of :func:`ips4o_sort` (module docstring).
+
+    Schedule: level 0 sorts word 0 outright.  Level l re-sorts only the
+    runs that still tie on words 0..l-1: tie runs are the
+    ``group_by``-style boundary runs of the already-sorted prefix, and the
+    segmented re-sort is two stable passes (sort by word l, then by run
+    id — the run id is nondecreasing before the pass, so the second sort
+    restores every run's index range with word l ordered inside it).
+    Words 0..l-1 are *not* threaded through the re-sort: they are constant
+    within a tie run by definition, and the composed permutation never
+    moves an element across runs.  A level with no surviving ties is
+    skipped at runtime via ``lax.cond``.
+
+    Returns ``(sorted cols, values)``; ``values`` leaves (leading dim n)
+    are permuted alongside through every pass.
+    """
+    cols = [c for c in cols]
+    if not cols:
+        raise ValueError("tiebreak_passes: need at least one word column")
+    n = cols[0].shape[0]
+    if any(c.shape != (n,) for c in cols):
+        raise ValueError("tiebreak_passes: word columns must share shape (n,)")
+    if n <= 1:
+        return cols, values
+
+    # level 0: plain sort on the most significant word
+    key, state = ips4o_sort(cols[0], {"rest": cols[1:], "v": values}, cfg=cfg)
+    out: List[jax.Array] = [key]
+    boundary = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), key[1:] != key[:-1]]
+    )
+
+    for lvl in range(1, len(cols)):
+        rest = state["rest"]
+        col, rest = rest[0], rest[1:]
+        # tie-run ids of the sorted prefix (words 0..lvl-1): nondecreasing,
+        # one id per maximal equal-prefix run (the group_by boundary scan)
+        seg = (jnp.cumsum(boundary.astype(jnp.int32)) - 1).astype(jnp.uint32)
+        has_ties = jnp.any(~boundary)
+
+        def _resort(args):
+            col, rest, v, seg = args
+            # stable segmented sort by (run, word lvl) as two stable passes
+            col_a, st_a = ips4o_sort(col, {"seg": seg, "rest": rest, "v": v}, cfg=cfg)
+            seg_b, st_b = ips4o_sort(
+                st_a["seg"], {"col": col_a, "rest": st_a["rest"], "v": st_a["v"]},
+                cfg=cfg,
+            )
+            return st_b["col"], st_b["rest"], st_b["v"], seg_b
+
+        col, rest, v, seg = jax.lax.cond(
+            has_ties, _resort, lambda args: args, (col, rest, state["v"], seg)
+        )
+        state = {"rest": rest, "v": v}
+        out.append(col)
+        boundary = boundary | jnp.concatenate(
+            [jnp.ones((1,), jnp.bool_), col[1:] != col[:-1]]
+        )
+
+    return out, state["v"]
 
 
 def is4o_sort(keys: jax.Array, values: Any = None, cfg: SortConfig = SortConfig()):

@@ -52,11 +52,19 @@ def _exponential(rng, n, dtype):
     x = rng.exponential(size=n)
     if np.issubdtype(dtype, np.floating):
         return x.astype(dtype)
-    return _clamp_to_int(x * (1 << 20), dtype)
+    # a fixed 2^20 scale saturates narrow dtypes — for int8 nearly every
+    # draw clamps to info.max, degenerating the "Exponential" input to a
+    # constant array; scale so the bulk of the mass (x < 8 covers all but
+    # ~3e-4 of it) stays in range, leaving int32/int64 behavior unchanged
+    info = np.iinfo(dtype)
+    scale = min(1 << 20, max(1, int(info.max) // 8))
+    return _clamp_to_int(x * scale, dtype)
 
 
 def _almost_sorted(rng, n, dtype):
     x = np.sort(_uniform(rng, n, dtype))
+    if n < 2:  # nothing to perturb (rng.integers rejects high=0)
+        return x
     num_swaps = max(1, int(np.sqrt(n)))
     i = rng.integers(0, n, num_swaps)
     j = rng.integers(0, n, num_swaps)

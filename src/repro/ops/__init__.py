@@ -6,6 +6,8 @@ engine exposed as a library of jit-compatible operations instead of a
 single monolithic sort entry point:
 
   sort / argsort      NaN-safe total-order sort (keyspace-encoded)
+  sort_records /      multi-word keys (strings, composite records) via the
+  argsort_records     MSD tie-break level schedule (DESIGN.md §11)
   topk / bottomk      splitter-based partial sort: classify + partition
                       once, base-case-sort only the rank-covering prefix
   segmented_sort      batched independent segments in one composite pass
@@ -32,7 +34,7 @@ from repro.ops.batched import (
 from repro.ops.groupby import Groups, group_by, run_length, unique
 from repro.ops.plan import PlanCache, default_cache, get_sorter
 from repro.ops.segmented import segmented_sort
-from repro.ops.sort import argsort, sort
+from repro.ops.sort import argsort, argsort_records, sort, sort_records
 from repro.ops.topk import bottomk, topk
 
 __all__ = [
@@ -40,6 +42,8 @@ __all__ = [
     "keyspace",
     "sort",
     "argsort",
+    "sort_records",
+    "argsort_records",
     "topk",
     "bottomk",
     "batched_sort",

@@ -21,13 +21,38 @@ equals the desired order on the originals:
 
 The complement of an encoded key reverses the order (``~u`` sorts
 descending), which is how ``topk`` reuses the ascending partial sort.
+
+Multi-word keys (DESIGN.md §11): strings and composite records do not fit
+one machine word, so :func:`encode_words` decomposes them into a fixed
+width ``(n, W)`` uint32 matrix — each record's bytes laid out big-endian
+across the words — such that **row-lexicographic order on the words equals
+the record order** (bytes order for strings, tuple order for composite
+columns, with every numeric column bijected through the same single-word
+encoding above).  ``ops.sort_records`` then sorts word 0 and tie-breaks
+the runs that collide word by word.  :func:`decode_words` inverts the
+layout.  These two run host-side (numpy): strings are inherently ragged
+host data; the resulting word matrix is what goes to the device.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+from typing import Any, List, Sequence, Tuple, Union
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["encode", "decode", "ordered_uint_dtype", "supported"]
+__all__ = [
+    "encode",
+    "decode",
+    "ordered_uint_dtype",
+    "supported",
+    "encode_np",
+    "decode_np",
+    "WordSpec",
+    "encode_words",
+    "decode_words",
+]
 
 _UINT_FOR_BITS = {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32, 64: jnp.uint64}
 
@@ -110,3 +135,215 @@ def decode(u: jax.Array, dtype) -> jax.Array:
     was_neg = (u & sign) == 0  # encoded negatives have the top bit clear
     bits = jnp.where(was_neg, ~u, u ^ sign)
     return jax.lax.bitcast_convert_type(bits, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy) mirror of encode/decode — the data layer's generators and
+# the multi-word codec below are host-side, and tests use these as the
+# independent oracle encoding.
+
+
+def encode_np(x: np.ndarray) -> np.ndarray:
+    """Numpy mirror of :func:`encode` (bit-identical).
+
+    >>> import numpy as np
+    >>> encode_np(np.asarray([-1.0, 0.0], np.float32)).dtype
+    dtype('uint32')
+    """
+    x = np.asarray(x)
+    dtype = x.dtype
+    udtype = np.dtype(_UINT_FOR_BITS[dtype.itemsize * 8].__name__)
+    sign = udtype.type(1) << udtype.type(dtype.itemsize * 8 - 1)
+    if np.issubdtype(dtype, np.unsignedinteger):
+        return x
+    if np.issubdtype(dtype, np.signedinteger):
+        return x.view(udtype) ^ sign
+    bits = x.view(udtype)
+    neg = (bits & sign) != 0
+    u = np.where(neg, ~bits, bits | sign)
+    return np.where(np.isnan(x), np.iinfo(udtype).max, u).astype(udtype)
+
+
+def decode_np(u: np.ndarray, dtype) -> np.ndarray:
+    """Numpy mirror of :func:`decode` (NaNs come back canonical).
+
+    >>> import numpy as np
+    >>> x = np.asarray([-2.5, -0.0, 3.0], np.float32)
+    >>> decode_np(encode_np(x), np.float32).tolist()
+    [-2.5, -0.0, 3.0]
+    """
+    u = np.asarray(u)
+    dtype = np.dtype(dtype)
+    udtype = u.dtype
+    sign = udtype.type(1) << udtype.type(dtype.itemsize * 8 - 1)
+    if np.issubdtype(dtype, np.unsignedinteger):
+        return u
+    if np.issubdtype(dtype, np.signedinteger):
+        return (u ^ sign).view(dtype)
+    was_neg = (u & sign) == 0
+    bits = np.where(was_neg, ~u, u ^ sign).astype(udtype)
+    return bits.view(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Multi-word keys (DESIGN.md §11): fixed-width big-endian word decomposition.
+
+_WORD_BYTES = 4  # uint32 words: wide enough to amortize passes, and every
+#                  backend sorts them without x64 mode
+
+
+@dataclass(frozen=True)
+class WordSpec:
+    """Layout metadata produced by :func:`encode_words`, consumed by
+    :func:`decode_words`.
+
+    ``kind`` is "bytes" (records were strings / byte strings, padded with
+    0x00 to ``row_bytes``) or "columns" (records were a tuple of numeric
+    columns whose per-column dtypes are ``dtypes``, laid out big-endian in
+    order).  ``words`` is W, the number of uint32 words per row.
+    """
+
+    kind: str
+    row_bytes: int
+    words: int
+    dtypes: Tuple[str, ...] = ()
+
+
+def _pack_rows(b: np.ndarray) -> np.ndarray:
+    """(n, L) uint8 byte rows -> (n, ceil(L/4)) big-endian uint32 words."""
+    n, L = b.shape
+    W = max(1, -(-L // _WORD_BYTES))
+    padded = np.zeros((n, W * _WORD_BYTES), np.uint8)
+    padded[:, :L] = b
+    q = padded.reshape(n, W, _WORD_BYTES).astype(np.uint32)
+    return (q[..., 0] << 24) | (q[..., 1] << 16) | (q[..., 2] << 8) | q[..., 3]
+
+
+def _unpack_rows(words: np.ndarray, row_bytes: int) -> np.ndarray:
+    """(n, W) uint32 words -> (n, row_bytes) uint8 byte rows."""
+    w = np.asarray(words, np.uint32)
+    n, W = w.shape
+    b = np.empty((n, W, _WORD_BYTES), np.uint8)
+    b[..., 0] = w >> 24
+    b[..., 1] = (w >> 16) & 0xFF
+    b[..., 2] = (w >> 8) & 0xFF
+    b[..., 3] = w & 0xFF
+    return b.reshape(n, W * _WORD_BYTES)[:, :row_bytes]
+
+
+def _is_strings(records: Any) -> bool:
+    if isinstance(records, np.ndarray):
+        return records.dtype.kind in "SU"
+    if isinstance(records, (list, tuple)):
+        return len(records) == 0 or isinstance(records[0], (bytes, bytearray, str))
+    return False
+
+
+def encode_words(
+    records: Union[Sequence[Union[bytes, str]], Sequence[np.ndarray]],
+    *,
+    width: int = None,
+) -> Tuple[np.ndarray, "WordSpec"]:
+    """Fixed-width big-endian word decomposition of records (host-side).
+
+    ``records`` is either a sequence of strings / byte strings, or a tuple
+    of equal-length numeric column arrays (a composite record per row).
+    Returns ``(words, spec)``: ``words`` is ``(n, W)`` uint32 with word 0
+    most significant, and **row-lexicographic order on the words equals
+    the record order** — bytes order for strings (shorter strings sort as
+    their 0x00-padded extension, i.e. a proper prefix sorts first), tuple
+    order for columns (each column in its keyspace order: NaNs last,
+    -0.0 < +0.0, signed ints by value).
+
+    Strings must not contain NUL bytes (0x00 is the padding code point);
+    ``width`` pads/validates strings to a fixed byte length (default: the
+    longest record).
+
+    >>> w, spec = encode_words([b"ab", b"abc", b""])
+    >>> w.shape, spec.words
+    ((3, 1), 1)
+    >>> import numpy as np
+    >>> bool(w[2, 0] < w[0, 0] < w[1, 0])  # "" < "ab" < "abc"
+    True
+    """
+    if _is_strings(records):
+        if isinstance(records, np.ndarray):
+            records = records.tolist()
+        bs: List[bytes] = [
+            r.encode("utf-8") if isinstance(r, str) else bytes(r) for r in records
+        ]
+        n = len(bs)
+        maxlen = max((len(b) for b in bs), default=0)
+        if width is None:
+            width = maxlen
+        elif maxlen > width:
+            raise ValueError(
+                f"encode_words: record of {maxlen} bytes exceeds width={width}"
+            )
+        mat = np.zeros((n, max(1, width)), np.uint8)
+        for i, b in enumerate(bs):
+            if b"\x00" in b:
+                raise ValueError(
+                    "encode_words: NUL byte in record (0x00 is the pad code)"
+                )
+            mat[i, : len(b)] = np.frombuffer(b, np.uint8)
+        return _pack_rows(mat), WordSpec(
+            kind="bytes", row_bytes=width, words=max(1, -(-width // _WORD_BYTES))
+        )
+    cols = [np.asarray(c) for c in records]
+    if not cols:
+        raise ValueError("encode_words: no columns")
+    n = cols[0].shape[0]
+    parts = []
+    for c in cols:
+        if c.shape != (n,):
+            raise ValueError("encode_words: columns must be equal-length 1-D")
+        if not supported(c.dtype):
+            raise TypeError(f"encode_words: unsupported column dtype {c.dtype}")
+        u = encode_np(c)
+        be = np.ascontiguousarray(u.astype(u.dtype.newbyteorder(">")))
+        parts.append(be.view(np.uint8).reshape(n, c.dtype.itemsize))
+    rows = np.concatenate(parts, axis=1) if n else np.zeros(
+        (0, sum(c.dtype.itemsize for c in cols)), np.uint8
+    )
+    row_bytes = sum(c.dtype.itemsize for c in cols)
+    return _pack_rows(rows), WordSpec(
+        kind="columns",
+        row_bytes=row_bytes,
+        words=max(1, -(-row_bytes // _WORD_BYTES)),
+        dtypes=tuple(str(c.dtype) for c in cols),
+    )
+
+
+def decode_words(
+    words: np.ndarray, spec: "WordSpec"
+) -> Union[List[bytes], Tuple[np.ndarray, ...]]:
+    """Inverse of :func:`encode_words` (host-side).
+
+    Strings come back as a list of byte strings with the 0x00 padding
+    stripped; columns come back as a tuple of arrays in the original
+    dtypes (bit-exact except NaN payloads, as with :func:`decode`).
+
+    >>> w, spec = encode_words([b"hi", b"there"])
+    >>> decode_words(w, spec)
+    [b'hi', b'there']
+    """
+    b = _unpack_rows(np.asarray(words), spec.row_bytes)
+    if spec.kind == "bytes":
+        return [bytes(row).rstrip(b"\x00") for row in b]
+    if spec.kind != "columns":
+        raise ValueError(f"decode_words: unknown spec kind {spec.kind!r}")
+    out = []
+    off = 0
+    for name in spec.dtypes:
+        dtype = np.dtype(name)
+        sz = dtype.itemsize
+        u = (
+            np.ascontiguousarray(b[:, off : off + sz])
+            .view(np.dtype(f">u{sz}"))
+            .reshape(-1)
+            .astype(np.dtype(f"u{sz}"))
+        )
+        out.append(decode_np(u, dtype))
+        off += sz
+    return tuple(out)

@@ -3,20 +3,30 @@
 These are thin compositions: biject keys into the ordered uint space
 (``ops.keyspace``), run ``ips4o_sort`` there (where ``>`` / ``==`` are a
 total order, so the documented NaN limitation disappears), and decode.
+
+``sort_records`` / ``argsort_records`` extend the same composition to
+multi-word keys (strings and composite records decomposed by
+``keyspace.encode_words``, DESIGN.md §11): word 0 is sorted outright and
+the runs that tie are re-sorted word by word through the MSD tie-break
+schedule (``core.ips4o.tiebreak_passes``), with the engine and classifier
+seams threaded through every pass — the radix classifier is the natural
+winner on prefix words (the high bits of a pass's composite run structure
+are exactly what it buckets on), and ``classifier="auto"`` routes through
+the racing plan-cache router like every other op.
 """
 from __future__ import annotations
 
 from dataclasses import replace
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.classify import resolve_classifier
-from repro.core.ips4o import SortConfig, ips4o_sort, resolve_engine
+from repro.core.ips4o import SortConfig, ips4o_sort, resolve_engine, tiebreak_passes
 from repro.ops import keyspace
 
-__all__ = ["sort", "argsort", "with_engine"]
+__all__ = ["sort", "argsort", "sort_records", "argsort_records", "with_engine"]
 
 
 def with_engine(
@@ -111,4 +121,81 @@ def argsort(
     _, order = ips4o_sort(
         keyspace.encode(keys), idx, cfg=with_engine(cfg, engine, keys, classifier)
     )
+    return order
+
+
+def _check_words(words: jax.Array) -> jax.Array:
+    words = jnp.asarray(words)
+    if words.ndim != 2:
+        raise ValueError("words must be 2-D (n, W)")
+    if words.shape[1] == 0:
+        raise ValueError("words must have at least one word column")
+    return words
+
+
+def _record_cols(words: jax.Array) -> Tuple[jax.Array, ...]:
+    return tuple(keyspace.encode(words[:, j]) for j in range(words.shape[1]))
+
+
+def sort_records(
+    words: jax.Array,
+    values: Any = None,
+    *,
+    cfg: SortConfig = SortConfig(),
+    engine: Optional[str] = None,
+    classifier: Optional[str] = None,
+):
+    """Sort multi-word records (n, W) into row-lexicographic order.
+
+    ``words`` is the fixed-width word decomposition of each record —
+    usually ``keyspace.encode_words`` output (uint32, word 0 most
+    significant), but any supported dtype works (each word column is
+    keyspace-encoded, so float/signed words order naturally, NaNs last).
+    The sort is **stable**: equal records keep their input order, and the
+    implied permutation is bit-identical to ``np.lexsort`` over the
+    columns.  A ``values`` pytree (leaves with leading dim n) is permuted
+    alongside.  Jit-compatible; ``engine`` / ``classifier`` thread through
+    every tie-break pass (DESIGN.md §11).
+
+    >>> import jax.numpy as jnp
+    >>> w = jnp.asarray([[1, 9], [0, 5], [1, 2]], jnp.uint32)
+    >>> sort_records(w).tolist()  # row-lexicographic
+    [[0, 5], [1, 2], [1, 9]]
+    """
+    words = _check_words(words)
+    n = words.shape[0]
+    if n <= 1:
+        return words if values is None else (words, values)
+    cfg = with_engine(cfg, engine, words[:, 0], classifier)
+    cols, vals = tiebreak_passes(_record_cols(words), values, cfg=cfg)
+    out = jnp.stack(
+        [keyspace.decode(c, words.dtype) for c in cols], axis=1
+    )
+    return out if values is None else (out, vals)
+
+
+def argsort_records(
+    words: jax.Array,
+    *,
+    cfg: SortConfig = SortConfig(),
+    engine: Optional[str] = None,
+    classifier: Optional[str] = None,
+) -> jax.Array:
+    """Stable lexicographic argsort of multi-word records (n, W):
+    ``words[argsort_records(words)]`` is row-sorted, and the permutation
+    is bit-identical to ``np.lexsort`` over the word columns (ties keep
+    input order).
+
+    >>> import jax.numpy as jnp
+    >>> w = jnp.asarray([[1, 9], [0, 5], [1, 2]], jnp.uint32)
+    >>> argsort_records(w).tolist()
+    [1, 2, 0]
+    """
+    words = _check_words(words)
+    n = words.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if n <= 1:
+        return idx
+    cfg = with_engine(cfg, engine, words[:, 0], classifier)
+    _, order = tiebreak_passes(_record_cols(words), idx, cfg=cfg)
     return order

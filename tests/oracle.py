@@ -1,0 +1,87 @@
+"""Shared sort oracles for the test suites.
+
+Every suite that checks a sort against "what numpy would do" needs the
+same three ingredients, previously re-implemented per file (test_stream,
+test_dist, test_level_fused, ...):
+
+  * the **keyspace total order** — ``jnp.sort`` in this jax version
+    leaves -0.0/+0.0 grouped but unordered and has no NaN story, while
+    ``ops.keyspace`` orders -0.0 strictly before +0.0 and NaNs last, so
+    oracles must sort *encoded* keys and decode back;
+  * **stability** — the engine's permutation is stable (core/ips4o.py
+    docstring), so oracles use ``kind="stable"`` argsorts;
+  * **bit-level assertions** — float comparisons must pin signbits
+    (``-0.0 == 0.0`` under ``==``, but they must *order*).
+
+All helpers take anything array-like and return host numpy.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ops import keyspace
+
+__all__ = [
+    "keyspace_sorted",
+    "stable_argsort",
+    "stable_oracle",
+    "assert_keys_equal",
+    "lex_argsort_words",
+    "stable_dest",
+]
+
+
+def keyspace_sorted(x) -> np.ndarray:
+    """Sorted keys in the keyspace total order (NaNs last, -0.0 before
+    +0.0 — the acceptance oracle for every full-sort path)."""
+    x = jnp.asarray(x)
+    enc = np.asarray(keyspace.encode(x))
+    return np.asarray(keyspace.decode(jnp.asarray(np.sort(enc)), x.dtype))
+
+
+def stable_argsort(x) -> np.ndarray:
+    """Stable argsort in the keyspace total order — what a stable engine's
+    index payload must reproduce exactly."""
+    return np.argsort(np.asarray(keyspace.encode(jnp.asarray(x))), kind="stable")
+
+
+def stable_oracle(x):
+    """(sorted keys, stable argsort) of x in the keyspace total order."""
+    x = jnp.asarray(x)
+    enc = np.asarray(keyspace.encode(x))
+    perm = np.argsort(enc, kind="stable")
+    return np.asarray(keyspace.decode(jnp.asarray(enc[perm]), x.dtype)), perm
+
+
+def assert_keys_equal(got, want) -> None:
+    """Bit-level key equality: positional equality (NaNs allowed to match
+    NaNs) plus a signbit pin for float dtypes."""
+    got, want = np.asarray(got), np.asarray(want)
+    np.testing.assert_array_equal(got, want)
+    if got.dtype.kind == "f":
+        np.testing.assert_array_equal(np.signbit(got), np.signbit(want))
+
+
+def lex_argsort_words(words) -> np.ndarray:
+    """Stable lexicographic argsort of an (n, W) word matrix, word 0 most
+    significant, each column compared in the keyspace total order — the
+    oracle for ``ops.argsort_records``.  (np.lexsort's *last* key is
+    primary, hence the reversal.)"""
+    w = np.asarray(words)
+    cols = [
+        np.asarray(keyspace.encode(jnp.asarray(w[:, j])))
+        for j in range(w.shape[1])
+    ]
+    return np.lexsort(tuple(reversed(cols)))
+
+
+def stable_dest(ids, nb):
+    """Global stable counting placement: dest[i] = offsets[b_i] + #earlier
+    same-bucket elements.  The scatter inverse of a stable argsort; the
+    partition-kernel oracle."""
+    ids = np.asarray(ids)
+    order = np.argsort(ids, kind="stable")
+    dest = np.empty(ids.size, np.int32)
+    dest[order] = np.arange(ids.size, dtype=np.int32)
+    hist = np.bincount(ids, minlength=nb)
+    off = np.concatenate([[0], np.cumsum(hist)]).astype(np.int32)
+    return dest, off

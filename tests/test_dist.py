@@ -23,11 +23,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from oracle import keyspace_sorted
 from repro import dist
 from repro.core.ips4o import SortConfig
 from repro.data.distributions import DISTRIBUTIONS, make_input
 from repro.dist.levels import plan_schedule
-from repro.ops import keyspace
 from repro.ops.plan import DistPlan, PlanCache
 
 # small geometry so level passes engage at test sizes
@@ -39,12 +39,9 @@ needs_8 = pytest.mark.skipif(
 )
 
 
-def _keyspace_sorted(x: np.ndarray) -> np.ndarray:
-    """The single-shard keyspace-order stable sort (the acceptance oracle:
-    NaNs last, -0.0 strictly before +0.0 — jnp.sort leaves the latter
-    unordered, the keyspace orders them)."""
-    enc = np.asarray(keyspace.encode(jnp.asarray(x)))
-    return np.asarray(keyspace.decode(jnp.asarray(np.sort(enc)), jnp.asarray(x).dtype))
+# single-shard keyspace-order stable sort (the acceptance oracle: NaNs
+# last, -0.0 strictly before +0.0) — shared across suites in tests/oracle.py
+_keyspace_sorted = keyspace_sorted
 
 
 def _valid_concat(out: np.ndarray, counts: np.ndarray) -> np.ndarray:

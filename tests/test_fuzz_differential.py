@@ -1,0 +1,149 @@
+"""Differential fuzz harness: the engine vs numpy, on everything at once.
+
+Each seeded case draws a point from (distribution ∪ dataset ∪ random
+records) x dtype x n x engine x classifier and asserts **bit-identity**
+against the host oracle (tests/oracle.py):
+
+  * sorted keys equal ``keyspace_sorted`` (NaNs last, -0.0 before +0.0,
+    signbits pinned);
+  * the index payload equals the **stable** argsort — this is the test
+    that pins the engine's stability guarantee (core/ips4o.py docstring);
+    any future change that reorders equal keys fails here first;
+  * record cases (multi-word, tie-heavy domains) equal ``np.lexsort``.
+
+The n pool deliberately includes 0, 1, non-powers-of-two, n < tile, and
+n > base_case (level passes + base case + padding paths all engaged).
+Cases are deterministic functions of their seed — a failure reproduces
+from the seed alone.  Tier-1 runs a bounded sweep; ``-m slow`` runs the
+long one (CI ``fuzz`` job).
+"""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from oracle import assert_keys_equal, keyspace_sorted, lex_argsort_words, stable_argsort
+from repro import ops
+from repro.core.ips4o import SortConfig
+from repro.data import datasets
+from repro.data.distributions import DISTRIBUTIONS, make_input
+
+# small geometry: n=4095+ engages level passes, tile=256 makes n=255 a
+# sub-tile case, base_case=1024 keeps tiny n on the window-sort path
+_CFG = SortConfig(base_case=1024, kmax=32, tile=256, max_sample=512)
+
+_DTYPES = (np.float32, np.int32, np.uint32, np.int16, np.uint8)
+_NS = (0, 1, 2, 17, 255, 1000, 4095, 4096, 5000, 8192)
+_ENGINES = ("xla", "pallas")
+_CLASSIFIERS = ("tree", "radix", "auto")
+_DISTS = sorted(DISTRIBUTIONS)
+
+
+def _scalar_case(seed: int):
+    rng = np.random.default_rng(seed)
+    return (
+        _DISTS[rng.integers(len(_DISTS))],
+        _DTYPES[rng.integers(len(_DTYPES))],
+        int(_NS[rng.integers(len(_NS))]),
+        _ENGINES[rng.integers(len(_ENGINES))],
+        _CLASSIFIERS[rng.integers(len(_CLASSIFIERS))],
+    )
+
+
+def _check_scalar(seed: int):
+    dist, dtype, n, engine, classifier = _scalar_case(seed)
+    x = make_input(dist, n, dtype, seed=seed)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    keys, perm = ops.sort(
+        jnp.asarray(x), idx, cfg=_CFG, engine=engine, classifier=classifier
+    )
+    assert_keys_equal(keys, keyspace_sorted(x))
+    np.testing.assert_array_equal(
+        np.asarray(perm), stable_argsort(x),
+        err_msg=f"stability broken: {dist} {np.dtype(dtype)} n={n} "
+        f"{engine}/{classifier} seed={seed}",
+    )
+
+
+def _check_records(seed: int):
+    rng = np.random.default_rng(seed)
+    n = int((0, 1, 33, 257, 2048)[rng.integers(5)])
+    W = int(rng.integers(2, 4))
+    if rng.integers(2):
+        # tiny domains: ties at every word, stability does all the work
+        words = rng.integers(0, 4, (n, W)).astype(np.uint32)
+    else:
+        pool = np.asarray([np.nan, -0.0, 0.0, 1.5, -1.5], np.float32)
+        words = rng.choice(pool, (n, W))
+    engine = _ENGINES[rng.integers(2)]
+    got = np.asarray(
+        ops.argsort_records(jnp.asarray(words), cfg=_CFG, engine=engine)
+    )
+    np.testing.assert_array_equal(
+        got, lex_argsort_words(words),
+        err_msg=f"records: n={n} W={W} {words.dtype} {engine} seed={seed}",
+    )
+
+
+def _check_dataset(seed: int):
+    rng = np.random.default_rng(seed)
+    name = sorted(datasets.DATASETS)[rng.integers(len(datasets.DATASETS))]
+    n = int((0, 1, 257)[rng.integers(3)])
+    width = 8 if name in ("RnaSequences", "UrlPaths") else None
+    ds = datasets.make_dataset(name, n, seed=seed, width=width)
+    got = np.asarray(ops.argsort_records(jnp.asarray(ds.words), cfg=_CFG))
+    np.testing.assert_array_equal(
+        got, datasets.oracle_argsort(ds), err_msg=f"dataset {name} n={n} seed={seed}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# tier-1 bounded sweep
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(24))
+def test_fuzz_scalar(seed):
+    _check_scalar(seed)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fuzz_records(seed):
+    _check_records(seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fuzz_datasets(seed):
+    _check_dataset(seed)
+
+
+# ---------------------------------------------------------------------------
+# long sweep — CI fuzz job:
+#   REPRO_FUZZ_LONG=1 pytest tests/test_fuzz_differential.py -m slow
+# (env-gated on top of the marker so a plain tier-1 `pytest -q`, which has
+# no -m filter, stays within its time budget)
+# ---------------------------------------------------------------------------
+_long = pytest.mark.skipif(
+    not os.environ.get("REPRO_FUZZ_LONG"),
+    reason="long fuzz sweep: set REPRO_FUZZ_LONG=1 (CI fuzz job)",
+)
+
+
+@_long
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(100, 196))
+def test_fuzz_scalar_long(seed):
+    _check_scalar(seed)
+
+
+@_long
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(100, 124))
+def test_fuzz_records_long(seed):
+    _check_records(seed)
+
+
+@_long
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(100, 112))
+def test_fuzz_datasets_long(seed):
+    _check_dataset(seed)

@@ -27,6 +27,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from oracle import stable_dest
 from repro import ops
 from repro.classify import classify, radix_bucket_ids
 from repro.core import sampling
@@ -63,16 +64,9 @@ _cfg = SortConfig(base_case=1024, kmax=32, tile=256, max_sample=256, slack=4)
 # ---------------------------------------------------------------------------
 
 
-def _stable_dest(ids, nb):
-    """Global stable counting placement: dest[i] = offsets[b_i] + #earlier
-    same-bucket elements.  The scatter inverse of a stable argsort."""
-    ids = np.asarray(ids)
-    order = np.argsort(ids, kind="stable")
-    dest = np.empty(ids.size, np.int32)
-    dest[order] = np.arange(ids.size, dtype=np.int32)
-    hist = np.bincount(ids, minlength=nb)
-    off = np.concatenate([[0], np.cumsum(hist)]).astype(np.int32)
-    return dest, off
+# global stable counting placement (the scatter inverse of a stable
+# argsort) — shared across suites in tests/oracle.py
+_stable_dest = stable_dest
 
 
 def _oracle_ids(keys, spl, k, n_real, clf, consumed=0):

@@ -91,6 +91,25 @@ def test_sort_with_payload():
     np.testing.assert_array_equal(x[vs], ks)
 
 
+@pytest.mark.parametrize("dtype", [np.int8, np.int16, np.uint8, np.uint16])
+def test_sort_narrow_int_dtypes(dtype):
+    # narrow dtypes ride the same distributions as wide ones; Exponential
+    # used to clamp int8/int16 to a constant info.max array (scale bug in
+    # data.distributions._exponential) — pin non-degeneracy AND parity
+    from repro.data.distributions import make_input
+
+    x = make_input("Exponential", 5000, dtype, seed=9)
+    assert len(np.unique(x)) > 3, "Exponential degenerated to ~constant"
+    assert x.max() <= np.iinfo(dtype).max
+    out = np.asarray(ops.sort(jnp.asarray(x), cfg=_small_cfg))
+    np.testing.assert_array_equal(out, np.sort(x))
+    for dist in ("Uniform", "TwoDup", "Ones"):
+        y = make_input(dist, 4096, dtype, seed=9)
+        np.testing.assert_array_equal(
+            np.asarray(ops.sort(jnp.asarray(y), cfg=_small_cfg)), np.sort(y)
+        )
+
+
 @pytest.mark.parametrize("n", [0, 1, 2, 255, 4096])
 def test_argsort_sizes(n):
     x = _rand(n, n)

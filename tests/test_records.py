@@ -1,0 +1,194 @@
+"""Multi-word record sorting suite (DESIGN.md §11).
+
+Three layers, cheapest first:
+
+  * **encoding properties** (host-only numpy, no device sort):
+    ``encode_words`` / ``decode_words`` round-trip strings (empty,
+    non-ASCII bytes, prefix pairs) and mixed-dtype columns; word order
+    *is* record order — checked against Python's own ``sorted`` over
+    bytes / tuples, including the keyspace refinements (-0.0 < +0.0);
+  * **tie-break stability**: duplicate full records keep input order, the
+    payload permutation is bit-identical to ``np.lexsort``;
+  * **the acceptance matrix**: all four dataset families x
+    {xla, pallas} x {tree, radix, auto} at n=4096, word-for-word equal to
+    the independent numpy oracle (``datasets.oracle_argsort`` — byte
+    strings / raw-column lexsort, no keyspace machinery).
+
+String datasets are width-clipped to 8 bytes (W=2) and composite
+families are W=3, so matrix cells share traces per (W, engine,
+classifier) and the matrix compiles a handful of programs, not 24.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from oracle import lex_argsort_words
+from repro import ops
+from repro.core.ips4o import SortConfig
+from repro.data import datasets
+from repro.ops import keyspace
+
+# small geometry so level passes engage at n=4096
+_CFG = SortConfig(base_case=1024, kmax=32, tile=256, max_sample=512)
+_N = 4096
+_WIDTH = 8  # byte budget for string families: W=2, heavier prefix ties
+
+ENGINES = ("xla", "pallas")
+CLASSIFIERS = ("tree", "radix", "auto")
+
+
+# ---------------------------------------------------------------------------
+# encode_words / decode_words: round-trip and order preservation (host-only)
+# ---------------------------------------------------------------------------
+def test_strings_roundtrip_and_order():
+    recs = [
+        b"",
+        b"a",
+        b"ab",
+        b"abc",            # proper prefix chain
+        "naïve".encode(),  # non-ASCII utf-8
+        b"abc\xffx",       # high bytes
+        bytes(range(1, 21)),
+        b"abc",            # exact duplicate
+    ]
+    words, spec = keyspace.encode_words(recs)
+    assert spec.kind == "bytes" and words.dtype == np.uint32
+    assert words.shape == (len(recs), spec.words)
+    assert keyspace.decode_words(words, spec) == recs
+    # row-lexicographic word order == bytes order, ties included
+    got = np.lexsort(tuple(reversed([words[:, j] for j in range(spec.words)])))
+    want = sorted(range(len(recs)), key=lambda i: (recs[i], i))
+    assert got.tolist() == want
+
+
+def test_strings_width_pad_validate_and_nul():
+    words, spec = keyspace.encode_words([b"ab"], width=9)
+    assert spec.row_bytes == 9 and spec.words == 3 and words.shape == (1, 3)
+    assert keyspace.decode_words(words, spec) == [b"ab"]
+    with pytest.raises(ValueError):
+        keyspace.encode_words([b"abcd"], width=3)  # record exceeds width
+    with pytest.raises(ValueError):
+        keyspace.encode_words([b"a\x00b"])  # NUL is the pad code point
+    # empty input and all-empty records still produce a (n, 1) matrix
+    w0, s0 = keyspace.encode_words([])
+    assert w0.shape == (0, 1) and s0.words == 1
+    w1, s1 = keyspace.encode_words([b"", b""])
+    assert w1.shape == (2, 1) and keyspace.decode_words(w1, s1) == [b"", b""]
+
+
+def test_columns_roundtrip_mixed_dtypes():
+    rng = np.random.default_rng(0)
+    cols = (
+        rng.standard_normal(64).astype(np.float32),
+        rng.integers(-300, 300, 64).astype(np.int16),
+        rng.integers(0, 256, 64).astype(np.uint8),
+        rng.integers(-(2**31), 2**31 - 1, 64).astype(np.int32),
+    )
+    words, spec = keyspace.encode_words(cols)
+    assert spec.kind == "columns" and spec.row_bytes == 4 + 2 + 1 + 4
+    assert spec.words == 3 and words.shape == (64, 3)
+    back = keyspace.decode_words(words, spec)
+    for a, b in zip(back, cols):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+
+
+def test_columns_order_matches_tuple_order():
+    # small domains force ties at every level; int16 crosses zero so the
+    # sign-flip encoding is what keeps word order == value order
+    rng = np.random.default_rng(1)
+    cols = (
+        rng.integers(-3, 3, 200).astype(np.int16),
+        rng.integers(0, 2, 200).astype(np.uint8),
+        rng.integers(-2, 2, 200).astype(np.int32),
+    )
+    words, spec = keyspace.encode_words(cols)
+    got = np.lexsort(tuple(reversed([words[:, j] for j in range(spec.words)])))
+    tuples = list(zip(*[c.tolist() for c in cols]))
+    want = sorted(range(200), key=lambda i: (tuples[i], i))
+    assert got.tolist() == want
+
+
+def test_columns_negzero_and_nan_refinement():
+    x = np.asarray([0.0, -0.0, np.nan, -np.inf, np.inf, 1.0], np.float32)
+    words, spec = keyspace.encode_words((x,))
+    order = np.argsort(words[:, 0], kind="stable")
+    # -inf < -0.0 < +0.0 < 1.0 < +inf < NaN
+    assert order.tolist() == [3, 1, 0, 5, 4, 2]
+    (back,) = keyspace.decode_words(words, spec)
+    assert np.signbit(back[1]) and not np.signbit(back[0])
+    assert np.isnan(back[2])
+
+
+def test_columns_rejects_bad_input():
+    with pytest.raises(ValueError):
+        keyspace.encode_words((np.zeros(3), np.zeros(4)))
+    with pytest.raises(ValueError):
+        keyspace.encode_words((np.zeros((2, 2)), np.zeros((2, 2))))
+    with pytest.raises(TypeError):
+        keyspace.encode_words((np.zeros(3, np.complex64),))
+
+
+# ---------------------------------------------------------------------------
+# tie-break stability on device
+# ---------------------------------------------------------------------------
+def test_sort_records_stable_payload_on_duplicates():
+    # 8 distinct records replicated 512x: every word ties everywhere, so
+    # the permutation is pure stability; lexsort is the stable oracle
+    rng = np.random.default_rng(2)
+    base = rng.integers(0, 3, (8, 3)).astype(np.uint32)
+    words = base[rng.integers(0, 8, _N)]
+    got = np.asarray(ops.argsort_records(jnp.asarray(words), cfg=_CFG))
+    np.testing.assert_array_equal(got, lex_argsort_words(words))
+    out, vals = ops.sort_records(
+        jnp.asarray(words), jnp.arange(_N, dtype=jnp.int32), cfg=_CFG
+    )
+    np.testing.assert_array_equal(np.asarray(vals), lex_argsort_words(words))
+    np.testing.assert_array_equal(np.asarray(out), words[lex_argsort_words(words)])
+
+
+def test_sort_records_float_words_nan_negzero():
+    rng = np.random.default_rng(3)
+    pool = np.asarray([np.nan, -0.0, 0.0, -1.5, 1.5, np.inf, -np.inf], np.float32)
+    words = rng.choice(pool, (_N, 2))
+    got = np.asarray(ops.argsort_records(jnp.asarray(words), cfg=_CFG))
+    np.testing.assert_array_equal(got, lex_argsort_words(words))
+
+
+def test_records_tiny_and_single_word():
+    assert ops.argsort_records(jnp.zeros((0, 2), jnp.uint32)).shape == (0,)
+    assert ops.argsort_records(jnp.zeros((1, 3), jnp.uint32)).tolist() == [0]
+    w = jnp.asarray([[5], [1], [3]], jnp.uint32)  # W=1: no tie-break levels
+    assert ops.argsort_records(w, cfg=_CFG).tolist() == [1, 2, 0]
+    with pytest.raises(ValueError):
+        ops.argsort_records(jnp.zeros((4,), jnp.uint32))
+    with pytest.raises(ValueError):
+        ops.argsort_records(jnp.zeros((4, 0), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance matrix: datasets x engines x classifiers
+# ---------------------------------------------------------------------------
+def _dataset(name):
+    width = _WIDTH if name in ("RnaSequences", "UrlPaths") else None
+    return datasets.make_dataset(name, _N, seed=11, width=width)
+
+
+@pytest.mark.parametrize("classifier", CLASSIFIERS)
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("name", sorted(datasets.DATASETS))
+def test_dataset_matrix(name, engine, classifier):
+    ds = _dataset(name)
+    got = np.asarray(
+        ops.argsort_records(
+            jnp.asarray(ds.words), cfg=_CFG, engine=engine, classifier=classifier
+        )
+    )
+    np.testing.assert_array_equal(got, datasets.oracle_argsort(ds))
+
+
+@pytest.mark.parametrize("name", sorted(datasets.DATASETS))
+def test_dataset_sort_records_bit_match(name):
+    ds = _dataset(name)
+    out = np.asarray(ops.sort_records(jnp.asarray(ds.words), cfg=_CFG))
+    np.testing.assert_array_equal(out, ds.words[datasets.oracle_argsort(ds)])

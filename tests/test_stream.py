@@ -12,6 +12,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from oracle import stable_oracle as _stable_oracle
 from repro import ops, stream
 from repro.data.distributions import DISTRIBUTIONS, make_input
 from repro.kernels.merge_path import merge_path_partition, merge_path_perm
@@ -65,7 +66,7 @@ def _stable_runs(x: jnp.ndarray, bounds):
     the setup under which a stable merge must reproduce the global stable
     argsort exactly.
 
-    Run order (and the oracle, see :func:`_stable_oracle`) lives in the
+    Run order (and the oracle, ``oracle.stable_oracle``) lives in the
     *keyspace* total order: ``jnp.sort`` in this jax version leaves
     -0.0/+0.0 grouped but unordered, while the keyspace (and therefore
     the merge) orders -0.0 strictly before +0.0.
@@ -77,13 +78,6 @@ def _stable_runs(x: jnp.ndarray, bounds):
         runs.append(x[lo:hi][order])
         idxs.append(order.astype(jnp.int32) + lo)
     return runs, idxs
-
-
-def _stable_oracle(x: jnp.ndarray):
-    """(sorted keys, stable argsort) of x in the keyspace total order."""
-    enc = ops.keyspace.encode(x)
-    perm = jnp.argsort(enc, stable=True)
-    return ops.keyspace.decode(enc[perm], x.dtype), perm
 
 
 @pytest.mark.parametrize("engine", ENGINES)

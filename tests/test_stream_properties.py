@@ -13,6 +13,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
+from oracle import stable_oracle as _stable_oracle
 from repro import stream
 from repro.ops import keyspace
 
@@ -29,12 +30,6 @@ def _stable_runs(x, bounds):
         runs.append(x[lo:hi][order])
         idxs.append(order.astype(jnp.int32) + lo)
     return runs, idxs
-
-
-def _stable_oracle(x):
-    enc = keyspace.encode(x)
-    perm = jnp.argsort(enc, stable=True)
-    return keyspace.decode(enc[perm], x.dtype), perm
 
 
 @settings(max_examples=30, deadline=None)
