@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.classify import learned_bucket_ids, radix_bucket_ids
 from repro.classify.tree import classify
 from repro.core import sampling
@@ -98,8 +99,14 @@ def _bench_cell(dist: str, dtype, n: int, plan_cache: PlanCache) -> list:
         fclf = jax.jit(partial(_classify_only, k=k, cfg=cfg, clf=clf))
         check_sorted(f(enc), enc)
         t = bench(lambda f=f: f(enc), agg="min")
-        tp = bench(lambda fpart=fpart: fpart(enc), agg="min")
-        tc = bench(lambda fclf=fclf: fclf(enc, rng), agg="min")
+        # the isolated sub-step timers are the noisiest columns of the
+        # suite (tens of us absolute): min-of-9 via the obs tracer instead
+        # of min-of-5 tightens run-to-run variance, and with obs enabled
+        # the k attempts land in the trace as phase:* spans
+        tp = obs.timed_min("phase:pass", lambda fpart=fpart: fpart(enc),
+                           clf=clf, dist=dist, n=n)
+        tc = obs.timed_min("phase:classify", lambda fclf=fclf: fclf(enc, rng),
+                           clf=clf, dist=dist, n=n)
         times[clf] = t
         row = {
             "bench": "classifier", "clf": clf, "dist": dist,

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 __all__ = [
     "CLASSIFIERS",
     "resolve_classifier",
@@ -73,7 +75,9 @@ def resolve_classifier(
 
         hint = default_cache.classifier_hint(n, dtype, batch=batch)
         if hint is not None:
+            obs.count("classifier.route", source="hint", winner=hint)
             return hint
+    obs.count("classifier.route", source="default", winner="tree")
     return "tree"
 
 
@@ -151,8 +155,11 @@ def classifier_for(
     arr = jnp.asarray(x)
     n = arr.shape[-1]
     b = arr.shape[0] if arr.ndim == 2 else batch
-    label = distribution_moments(arr)
-    winner = cache.classifier_plan(
-        n, arr.dtype, dist=label, batch=b, tune=tune, x=arr
-    )
-    return winner or "tree"
+    with obs.trace("classifier.route_for", n=n, batch=b):
+        label = distribution_moments(arr)
+        winner = cache.classifier_plan(
+            n, arr.dtype, dist=label, batch=b, tune=tune, x=arr
+        )
+    winner = winner or "tree"
+    obs.count("classifier.route", source="race", winner=winner, dist=label)
+    return winner

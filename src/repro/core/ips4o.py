@@ -62,7 +62,9 @@ from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import obs
 from repro.classify import (
     classify,
     classify_batched,
@@ -146,6 +148,43 @@ def _auto_tile(n: int, nb: int, cfg: SortConfig) -> int:
     while (n // tile) * nb > (1 << 26) and tile < cfg.base_case:
         tile *= 2
     return tile
+
+
+def _obs_level_stats(offsets, nb: int, pad_bucket: Optional[int], level: str) -> None:
+    """Bucket-balance stats for one completed level pass, as pure
+    functions of the partition offsets, delivered through the obs side
+    channel (unordered debug callback — ``repro.obs``, DESIGN.md §12).
+    Stages nothing — zero added jaxpr equations — unless obs is enabled
+    at trace time.  Accepts (nb+1,) and batched (B, nb+1) offsets."""
+    if not obs.enabled():
+        return
+    sizes = jnp.diff(offsets, axis=-1)
+    ids = np.arange(nb)
+    mask = ids % 2 == 0  # odd ids = equality buckets, sized by the data
+    if pad_bucket is not None:
+        mask &= ids != pad_bucket
+    k_eff = int(mask.sum())
+    if k_eff == 0:
+        return
+    rows = int(np.prod(sizes.shape[:-1], dtype=np.int64)) if sizes.ndim > 1 else 1
+    szs = jnp.where(jnp.asarray(mask), sizes, 0)
+    largest = jnp.max(szs)
+    mean = jnp.maximum(jnp.sum(szs) / (k_eff * max(rows, 1)), 1.0)
+    obs.jit_observe(
+        "sort.bucket_imbalance", largest.astype(jnp.float32) / mean, level=level
+    )
+    obs.jit_observe("sort.largest_bucket", largest, level=level)
+
+
+def _obs_base_stats(violated: jax.Array) -> None:
+    """Base-case vs robustness-fallback counters (pure in-jit stats;
+    staged only when obs is enabled at trace time — emitted *before* the
+    ``lax.cond`` so the callback never sits inside a branch)."""
+    if not obs.enabled():
+        return
+    v = violated.astype(jnp.int32)
+    obs.jit_count("sort.fallback_engaged", v)
+    obs.jit_count("sort.base_case", 1 - v)
 
 
 # Largest bucket count the fused rank kernel takes on: its per-tile
@@ -312,12 +351,13 @@ def level_pass(
     interpret = resolve_interpret()
 
     if clf != "radix":
-        m1 = min(
-            max(sampling.oversampling_factor(n_real) * k, k), cfg.max_sample, n_real
-        )
-        sample_pos = jax.random.randint(rng, (m1,), 0, n_real)
-        sample = jnp.sort(jnp.take(keys, sample_pos, axis=0))
-        spl = sampling.select_splitters(sample, k)
+        with obs.trace("sample", k=k, n=n_real):
+            m1 = min(
+                max(sampling.oversampling_factor(n_real) * k, k), cfg.max_sample, n_real
+            )
+            sample_pos = jax.random.randint(rng, (m1,), 0, n_real)
+            sample = jnp.sort(jnp.take(keys, sample_pos, axis=0))
+            spl = sampling.select_splitters(sample, k)
 
     if rows:
         # the fused single-pass level kernel: classify + histogram + rank
@@ -325,29 +365,33 @@ def level_pass(
         # epilogue yields the stable destinations and bucket boundaries
         from repro.kernels.level_fused import level_fused
 
-        dest, off = level_fused(
-            keys, None if clf == "radix" else spl, k=k, n_real=n_real,
-            classifier=clf, consumed_bits=consumed_bits, rows=rows,
+        with obs.trace("classify", engine="pallas", fused=True, classifier=clf, k=k):
+            dest, off = level_fused(
+                keys, None if clf == "radix" else spl, k=k, n_real=n_real,
+                classifier=clf, consumed_bits=consumed_bits, rows=rows,
+                interpret=interpret,
+            )
+        with obs.trace("partition", engine="pallas", fused=True, nb=nb):
+            arrays = jax.tree.map(
+                lambda a: jnp.zeros_like(a).at[dest].set(a, mode="promise_in_bounds"),
+                arrays,
+            )
+        return arrays, off, nb, 2 * k
+    with obs.trace("classify", engine=engine, classifier=clf, k=k):
+        if clf == "radix":
+            b = radix_bucket_ids(keys, k, consumed_bits)
+        elif clf == "learned":
+            b, _ = learned_bucket_ids(keys, sample, spl, k)
+        else:
+            b = classify(keys, spl, k)
+        if pad_n:
+            is_pad = jnp.arange(n, dtype=jnp.int32) >= n_real
+            b = jnp.where(is_pad, 2 * k, b)
+    with obs.trace("partition", engine=engine, nb=nb):
+        arrays, off = stable_partition(
+            b, arrays, nb, _auto_tile(n, nb, cfg), engine=engine,
             interpret=interpret,
         )
-        arrays = jax.tree.map(
-            lambda a: jnp.zeros_like(a).at[dest].set(a, mode="promise_in_bounds"),
-            arrays,
-        )
-        return arrays, off, nb, 2 * k
-    if clf == "radix":
-        b = radix_bucket_ids(keys, k, consumed_bits)
-    elif clf == "learned":
-        b, _ = learned_bucket_ids(keys, sample, spl, k)
-    else:
-        b = classify(keys, spl, k)
-    if pad_n:
-        is_pad = jnp.arange(n, dtype=jnp.int32) >= n_real
-        b = jnp.where(is_pad, 2 * k, b)
-    arrays, off = stable_partition(
-        b, arrays, nb, _auto_tile(n, nb, cfg), engine=engine,
-        interpret=interpret,
-    )
     return arrays, off, nb, 2 * k
 
 
@@ -390,26 +434,30 @@ def segmented_level_pass(
     if classifier == "radix":
         # no sampling pass: within a radix-aligned segment the next
         # log2(k) bits are monotone, and the shift is segment-independent
-        local = radix_bucket_ids(keys, k, consumed_bits)
+        with obs.trace("classify", segmented=True, classifier="radix", k=k):
+            local = radix_bucket_ids(keys, k, consumed_bits)
     else:
-        m = min(max(sampling.oversampling_factor(n_real) * k, k), sample_cap)
-        seg_rngs = jax.random.split(rng, num_seg)
-        pos = jax.vmap(lambda r, lo, hi: sampling.sample_indices(r, m, lo, hi))(
-            seg_rngs, seg_offsets[:-1], seg_offsets[1:]
-        )
-        svals = jnp.sort(
-            jnp.take(keys, pos.reshape(-1), axis=0).reshape(num_seg, m), axis=-1
-        )
-        spl = sampling.select_splitters(svals, k)  # (num_seg, k-1)
-        local = classify_segmented(keys, seg, spl, k)
+        with obs.trace("sample", segmented=True, k=k, segments=num_seg):
+            m = min(max(sampling.oversampling_factor(n_real) * k, k), sample_cap)
+            seg_rngs = jax.random.split(rng, num_seg)
+            pos = jax.vmap(lambda r, lo, hi: sampling.sample_indices(r, m, lo, hi))(
+                seg_rngs, seg_offsets[:-1], seg_offsets[1:]
+            )
+            svals = jnp.sort(
+                jnp.take(keys, pos.reshape(-1), axis=0).reshape(num_seg, m), axis=-1
+            )
+            spl = sampling.select_splitters(svals, k)  # (num_seg, k-1)
+        with obs.trace("classify", segmented=True, classifier="tree", k=k):
+            local = classify_segmented(keys, seg, spl, k)
     comp = seg * (2 * k) + local
     nb = num_seg * 2 * k
     engine = resolve_engine(cfg, n, keys.dtype)
     if engine == "pallas" and nb > _PALLAS_NB_MAX:
         engine = "xla"
-    arrays, offsets = stable_partition(
-        comp, arrays, nb, _auto_tile(n, nb, cfg), engine=engine
-    )
+    with obs.trace("partition", segmented=True, nb=nb, engine=engine):
+        arrays, offsets = stable_partition(
+            comp, arrays, nb, _auto_tile(n, nb, cfg), engine=engine
+        )
     return arrays, offsets, nb
 
 
@@ -433,14 +481,18 @@ def partition_passes(
     clf = resolve_classifier(cfg.classifier)
     rng = jax.random.PRNGKey(cfg.seed)
     r1, r2 = jax.random.split(rng)
-    arrays, off1, nb1, pad_bucket = level_pass(arrays, n_real, levels[0], cfg, r1)
+    with obs.trace("level_pass", level=1, k=levels[0]):
+        arrays, off1, nb1, pad_bucket = level_pass(arrays, n_real, levels[0], cfg, r1)
+    _obs_level_stats(off1, nb1, pad_bucket, level="1")
     if len(levels) == 1:
         return arrays, off1, nb1, pad_bucket
-    arrays, offsets, nb = segmented_level_pass(
-        arrays, off1, nb1, n_real, levels[1], cfg, r2,
-        classifier="radix" if clf == "radix" else "tree",
-        consumed_bits=int(math.log2(levels[0])),
-    )
+    with obs.trace("level_pass", level=2, k=levels[1], segmented=True):
+        arrays, offsets, nb = segmented_level_pass(
+            arrays, off1, nb1, n_real, levels[1], cfg, r2,
+            classifier="radix" if clf == "radix" else "tree",
+            consumed_bits=int(math.log2(levels[0])),
+        )
+    _obs_level_stats(offsets, nb, None, level="2")
     return arrays, offsets, nb, None  # pads now sit in an odd equality bucket
 
 
@@ -481,15 +533,17 @@ def _sort_padded(arrays: Any, n_real: int, cfg: SortConfig, levels: Sequence[int
     # ---- Base case + robustness fallback ---------------------------------
     fb = segment_ids(offsets, n)
     violated = bucket_violations(offsets, nb, W, pad_bucket)
+    _obs_base_stats(violated)
 
-    if cfg.fallback:
-        return jax.lax.cond(
-            violated,
-            stable_full_sort,
-            lambda a: base_case(a, fb, W),
-            arrays,
-        )
-    return base_case(arrays, fb, W)
+    with obs.trace("base_case", W=W, fallback=cfg.fallback):
+        if cfg.fallback:
+            return jax.lax.cond(
+                violated,
+                stable_full_sort,
+                lambda a: base_case(a, fb, W),
+                arrays,
+            )
+        return base_case(arrays, fb, W)
 
 
 # --------------------------------------------------------------------------
@@ -618,45 +672,54 @@ def batched_level_pass(
     interpret = resolve_interpret()
 
     if clf != "radix":
-        m1 = min(
-            max(sampling.oversampling_factor(n_real) * k, k), cfg.max_sample, n_real
-        )
-        row_rngs = jax.random.split(rng, B)
-        sample_pos = jax.vmap(lambda r: jax.random.randint(r, (m1,), 0, n_real))(
-            row_rngs
-        )
-        sample = jnp.sort(jnp.take_along_axis(keys, sample_pos, axis=1), axis=1)
-        spl = sampling.select_splitters(sample, k)  # (B, k-1) per-row splitters
+        with obs.trace("sample", batched=True, k=k, n=n_real):
+            m1 = min(
+                max(sampling.oversampling_factor(n_real) * k, k), cfg.max_sample, n_real
+            )
+            row_rngs = jax.random.split(rng, B)
+            sample_pos = jax.vmap(lambda r: jax.random.randint(r, (m1,), 0, n_real))(
+                row_rngs
+            )
+            sample = jnp.sort(jnp.take_along_axis(keys, sample_pos, axis=1), axis=1)
+            spl = sampling.select_splitters(sample, k)  # (B, k-1) per-row splitters
 
     if rows:
         # one batch-grid launch of the fused level kernel for all B rows
         from repro.kernels.level_fused import level_fused_batched
 
-        dest, off = level_fused_batched(
-            keys, None if clf == "radix" else spl, k=k, n_real=n_real,
-            classifier=clf, rows=rows, interpret=interpret,
+        with obs.trace("classify", batched=True, engine="pallas", fused=True, k=k):
+            dest, off = level_fused_batched(
+                keys, None if clf == "radix" else spl, k=k, n_real=n_real,
+                classifier=clf, rows=rows, interpret=interpret,
+            )
+        with obs.trace("partition", batched=True, engine="pallas", fused=True, nb=nb):
+            flat_dest = (
+                dest + n * jnp.arange(B, dtype=jnp.int32)[:, None]
+            ).reshape(-1)
+
+            def move(a):
+                fa = a.reshape((B * n,) + a.shape[2:])
+                out = jnp.zeros_like(fa).at[flat_dest].set(
+                    fa, mode="promise_in_bounds"
+                )
+                return out.reshape(a.shape)
+
+            return jax.tree.map(move, arrays), off, nb, 2 * k
+    with obs.trace("classify", batched=True, engine=engine, classifier=clf, k=k):
+        if clf == "radix":
+            b = radix_bucket_ids(keys, k)
+        elif clf == "learned":
+            b, _ = learned_bucket_ids_batched(keys, sample, spl, k)
+        else:
+            b = classify_batched(keys, spl, k)
+        if pad_n:
+            is_pad = jnp.arange(n, dtype=jnp.int32)[None, :] >= n_real
+            b = jnp.where(is_pad, 2 * k, b)
+    with obs.trace("partition", batched=True, engine=engine, nb=nb):
+        arrays, off = batched_stable_partition(
+            b, arrays, nb, _auto_tile(n, nb, cfg), engine=engine,
+            interpret=interpret,
         )
-        flat_dest = (dest + n * jnp.arange(B, dtype=jnp.int32)[:, None]).reshape(-1)
-
-        def move(a):
-            fa = a.reshape((B * n,) + a.shape[2:])
-            out = jnp.zeros_like(fa).at[flat_dest].set(fa, mode="promise_in_bounds")
-            return out.reshape(a.shape)
-
-        return jax.tree.map(move, arrays), off, nb, 2 * k
-    if clf == "radix":
-        b = radix_bucket_ids(keys, k)
-    elif clf == "learned":
-        b, _ = learned_bucket_ids_batched(keys, sample, spl, k)
-    else:
-        b = classify_batched(keys, spl, k)
-    if pad_n:
-        is_pad = jnp.arange(n, dtype=jnp.int32)[None, :] >= n_real
-        b = jnp.where(is_pad, 2 * k, b)
-    arrays, off = batched_stable_partition(
-        b, arrays, nb, _auto_tile(n, nb, cfg), engine=engine,
-        interpret=interpret,
-    )
     return arrays, off, nb, 2 * k
 
 
@@ -733,16 +796,20 @@ def batched_partition_passes(
     clf = resolve_classifier(cfg.classifier)
     rng = jax.random.PRNGKey(cfg.seed)
     r1, r2 = jax.random.split(rng)
-    arrays, off1, nb1, pad_bucket = batched_level_pass(
-        arrays, n_real, levels[0], cfg, r1
-    )
+    with obs.trace("level_pass", level=1, k=levels[0], batched=True):
+        arrays, off1, nb1, pad_bucket = batched_level_pass(
+            arrays, n_real, levels[0], cfg, r1
+        )
+    _obs_level_stats(off1, nb1, pad_bucket, level="1")
     if len(levels) == 1:
         return arrays, off1, nb1, pad_bucket
-    arrays, offsets, nb = batched_segmented_level_pass(
-        arrays, off1, nb1, n_real, levels[1], cfg, r2,
-        classifier="radix" if clf == "radix" else "tree",
-        consumed_bits=int(math.log2(levels[0])),
-    )
+    with obs.trace("level_pass", level=2, k=levels[1], batched=True, segmented=True):
+        arrays, offsets, nb = batched_segmented_level_pass(
+            arrays, off1, nb1, n_real, levels[1], cfg, r2,
+            classifier="radix" if clf == "radix" else "tree",
+            consumed_bits=int(math.log2(levels[0])),
+        )
+    _obs_level_stats(offsets, nb, None, level="2")
     return arrays, offsets, nb, None  # pads now sit in odd equality buckets
 
 
@@ -762,15 +829,17 @@ def _sort_padded_batched(
 
     fb = batched_segment_ids(offsets, n)
     violated = batched_bucket_violations(offsets, nb, W, pad_bucket)
+    _obs_base_stats(violated)
 
-    if cfg.fallback:
-        return jax.lax.cond(
-            violated,
-            batched_stable_full_sort,
-            lambda a: batched_base_case(a, fb, W),
-            arrays,
-        )
-    return batched_base_case(arrays, fb, W)
+    with obs.trace("base_case", W=W, fallback=cfg.fallback, batched=True):
+        if cfg.fallback:
+            return jax.lax.cond(
+                violated,
+                batched_stable_full_sort,
+                lambda a: batched_base_case(a, fb, W),
+                arrays,
+            )
+        return batched_base_case(arrays, fb, W)
 
 
 def ips4o_sort_batched(
@@ -798,9 +867,10 @@ def ips4o_sort_batched(
         arrays["v"] = values
 
     unit = max(cfg.base_case, cfg.tile)
-    arrays = batched_pad_with_sentinel(arrays, unit)
-    levels = plan_levels(arrays["k"].shape[1], cfg)
-    arrays = _sort_padded_batched(arrays, n, cfg, levels)
+    with obs.trace("ips4o_sort_batched", B=B, n=n, engine=cfg.engine):
+        arrays = batched_pad_with_sentinel(arrays, unit)
+        levels = plan_levels(arrays["k"].shape[1], cfg)
+        arrays = _sort_padded_batched(arrays, n, cfg, levels)
 
     out_k = arrays["k"][:, :n]
     if values is None:
@@ -833,9 +903,12 @@ def ips4o_sort(
         arrays["v"] = values
 
     unit = max(cfg.base_case, cfg.tile)
-    arrays = pad_with_sentinel(arrays, unit)
-    levels = plan_levels(arrays["k"].shape[0], cfg)
-    arrays = _sort_padded(arrays, n, cfg, levels)
+    with obs.trace(
+        "ips4o_sort", n=n, engine=cfg.engine, classifier=cfg.classifier
+    ):
+        arrays = pad_with_sentinel(arrays, unit)
+        levels = plan_levels(arrays["k"].shape[0], cfg)
+        arrays = _sort_padded(arrays, n, cfg, levels)
 
     out_k = arrays["k"][:n]
     if values is None:

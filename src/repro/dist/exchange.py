@@ -28,7 +28,13 @@ draw, a ``psum`` makes the counts global, and
 balanced ranks.  Rounds are a statically unrolled, bounded loop (the
 recursion-free discipline of ``core/ips4o.py``); only if every round
 overflows does the exchange truncate deterministically and raise the
-overflow flag — the last resort, no longer the first response.
+overflow flag — the last resort, no longer the first response.  With
+``repro.obs`` enabled, truncation is no longer silent either: the
+exchange records a ``dist.exchange_overflow`` event carrying the
+observed per-round fill (max chunk / capacity, one entry per round) and
+logs a one-line warning; converged exchanges record the active re-split
+round count (``dist.resplit_rounds``) and per-shard collective volume
+(``dist.collective_bytes``) per level (DESIGN.md §12).
 
 **Radix destinations** (``classifier="radix"``, DESIGN.md §9): when the
 level's group count is a power of two and the keys are keyspace-encoded
@@ -49,6 +55,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import sampling
 from repro.core.partition import stable_partition
 from repro.dist.levels import Level
@@ -169,6 +176,17 @@ def exchange_level(
         n_out = level.n_out
         m_new = jnp.minimum(m, jnp.asarray(n_out, jnp.int32))
         overflow = m > n_out
+        if obs.enabled():
+            obs.jit_event(
+                "dist.exchange_overflow",
+                {"m": m},
+                gate=overflow,
+                warn=(
+                    f"repro.dist: degenerate level {level_idx} buffer "
+                    f"(n_out={n_out}) overflowed; truncating"
+                ),
+                level=str(level_idx), groups=1, capacity=n_out,
+            )
         if n_out >= n:
             pad = n_out - n
 
@@ -189,6 +207,12 @@ def exchange_level(
     spl = None
     dest_keep = jnp.zeros((n,), jnp.int32)
     done = jnp.asarray(False)
+    # obs (DESIGN.md §12): per-round worst global fill (max chunk / cap)
+    # and the number of *active* re-split rounds, staged only when obs is
+    # enabled at trace time — zero added ops otherwise
+    track = obs.enabled()
+    round_fill = []
+    rounds_used = jnp.asarray(0, jnp.int32)
     use_radix = (
         classifier == "radix"
         and g & (g - 1) == 0
@@ -209,6 +233,13 @@ def exchange_level(
             dest, counts = _radix_dest(arrays["k"], valid, g)
             over_here = jnp.any(counts > cap)
             over_r = jax.lax.pmax(over_here.astype(jnp.int32), level.domain) > 0
+            if track:
+                round_fill.append(
+                    jax.lax.pmax(
+                        jnp.max(counts).astype(jnp.float32), level.domain
+                    ) / cap
+                )
+                rounds_used = rounds_used + 1
             dest_keep = dest
             done = ~over_r
             continue
@@ -234,6 +265,16 @@ def exchange_level(
         dest, counts = _classify(arrays["k"], spl, valid, g)
         over_here = jnp.any(counts > cap)
         over_r = jax.lax.pmax(over_here.astype(jnp.int32), level.domain) > 0
+        if track:
+            # ``done`` still holds the PREVIOUS round's verdict here, so a
+            # round is "active" iff the exchange had not yet converged
+            active = jnp.asarray(True) if r == 0 else ~done
+            round_fill.append(
+                jax.lax.pmax(
+                    jnp.max(counts).astype(jnp.float32), level.domain
+                ) / cap
+            )
+            rounds_used = rounds_used + active.astype(jnp.int32)
         if r == 0:
             dest_keep = dest
             done = ~over_r
@@ -241,6 +282,26 @@ def exchange_level(
             dest_keep = jnp.where(done, dest_keep, dest)
             done = jnp.logical_or(done, ~over_r)
     overflowed = ~done
+    if track:
+        # fill/rounds are pmax-replicated: record once per domain group
+        # (lead shard) instead of once per shard
+        is_lead = jax.lax.axis_index(level.domain) == 0
+        obs.jit_observe(
+            "dist.resplit_rounds", rounds_used, gate=is_lead,
+            level=str(level_idx), axis=str(level.axis),
+        )
+        obs.jit_event(
+            "dist.exchange_overflow",
+            {"round_fill": jnp.stack(round_fill), "rounds_used": rounds_used},
+            gate=overflowed & is_lead,
+            warn=(
+                f"repro.dist: capacity exhausted after "
+                f"{max(0, retries) + 1} round(s) at level {level_idx} "
+                f"(axis {level.axis!r}, capacity {cap}); truncating "
+                f"overflowing chunks"
+            ),
+            level=str(level_idx), groups=g, capacity=cap,
+        )
 
     # stable block partition with a trash bucket for pads (never sent)
     parts, offsets = stable_partition(
@@ -248,6 +309,18 @@ def exchange_level(
     )
     counts = jnp.diff(offsets)[:g]
     send_counts = jnp.minimum(counts, cap)  # truncation only past the last retry
+    if track:
+        # this shard's real payload on the wire this level (the padded
+        # frame is the static g * cap * itemsize upper bound)
+        per_elem = sum(
+            jnp.dtype(leaf.dtype).itemsize for leaf in jax.tree.leaves(parts)
+        )
+        obs.jit_observe(
+            "dist.collective_bytes",
+            jnp.sum(send_counts).astype(jnp.float32) * per_elem,
+            level=str(level_idx), axis=str(level.axis),
+            padded_bytes=g * cap * per_elem,
+        )
 
     idx = offsets[:g, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
     in_cap = jnp.arange(cap, dtype=jnp.int32)[None, :] < send_counts[:, None]

@@ -180,6 +180,9 @@ def launch_spec(
                 break
     elif n is not None and n % (rows * _CLASSIFY_LANES):
         rows = 0
+    from repro import obs  # lazy: keep the roofline importable without jax
+
+    obs.count("launch.spec", kind=kind, rows=rows)  # rows=0 = XLA fallback
     return KernelLaunchSpec(
         kind=kind, rows=rows, vmem_budget=budget, interpret=interpret
     )

@@ -1,0 +1,200 @@
+"""Metrics registry: counters, gauges, histograms — host-side and in-jit.
+
+Two families of hooks (DESIGN.md §12 purity rules):
+
+* **Host-side** (``count`` / ``gauge`` / ``observe``): called from plain
+  Python — plan-cache lookups, router decisions, stream spills, launch
+  specs.  With obs disabled each is a single dict-lookup-and-return.
+
+* **In-jit** (``jit_count`` / ``jit_observe`` / ``jit_event``): called
+  from inside traced code with traced values.  The in-jit stats are pure
+  functions of traced arrays; delivery to the host registry rides an
+  *unordered* ``jax.debug.callback`` (ordered effects are disallowed
+  under ``lax.cond``, which the robustness fallback and the tie-break
+  schedule both use).  When obs is disabled **at trace time** these
+  stage nothing at all — zero added jaxpr equations, verified by the
+  jaxpr-identity test in ``tests/test_obs.py``.
+
+``gate=`` on the jit hooks takes a traced boolean: the callback still
+runs host-side on every shard/invocation, but records only when the
+gate is true — used to deduplicate pmax-replicated values under
+``shard_map`` by gating on ``axis_index(...) == 0``.
+"""
+from __future__ import annotations
+
+import logging
+from typing import Any, Dict, List, Optional
+
+from repro.obs import tracer
+
+__all__ = [
+    "count",
+    "counter_value",
+    "gauge",
+    "hist_values",
+    "jit_count",
+    "jit_event",
+    "jit_observe",
+    "metrics_snapshot",
+    "observe",
+]
+
+_LOG = logging.getLogger("repro.obs")
+
+
+def _labels_key(labels: Dict[str, Any]) -> tuple:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+# -- host-side hooks ------------------------------------------------------
+
+def count(name: str, value: float = 1, **labels: Any) -> None:
+    """Increment counter ``name`` (one series per distinct label set)."""
+    if not tracer._STATE["enabled"]:
+        return
+    tracer._RECORDER.add_count(name, float(value), _labels_key(labels))
+
+
+def gauge(name: str, value: float, **labels: Any) -> None:
+    """Set gauge ``name`` to its latest value."""
+    if not tracer._STATE["enabled"]:
+        return
+    tracer._RECORDER.set_gauge(name, float(value), _labels_key(labels))
+
+
+def observe(name: str, value: float, **labels: Any) -> None:
+    """Record one observation into histogram ``name``."""
+    if not tracer._STATE["enabled"]:
+        return
+    tracer._RECORDER.add_observation(name, float(value), _labels_key(labels))
+
+
+# -- in-jit hooks (staged only when obs is enabled at trace time) ---------
+
+def jit_count(name: str, value: Any, **labels: Any) -> None:
+    """Counter increment by a traced value, delivered via an unordered
+    debug callback at execution time.  No-op (zero added eqns) when obs
+    is disabled at trace time."""
+    if not tracer._STATE["enabled"]:
+        return
+    import jax
+    import numpy as np
+
+    key = _labels_key(labels)
+
+    def _cb(v: Any, _n: str = name, _k: tuple = key) -> None:
+        tracer._RECORDER.add_count(_n, float(np.asarray(v).sum()), _k)
+
+    jax.debug.callback(_cb, value)
+
+
+def jit_observe(
+    name: str, value: Any, *, gate: Any = None, **labels: Any
+) -> None:
+    """Histogram observation(s) from a traced array; ``gate`` (traced
+    bool) suppresses recording at runtime — e.g. lead-shard gating of
+    pmax-replicated values under ``shard_map``."""
+    if not tracer._STATE["enabled"]:
+        return
+    import jax
+    import numpy as np
+
+    key = _labels_key(labels)
+
+    def _cb(g: Any, v: Any, _n: str = name, _k: tuple = key) -> None:
+        if not bool(np.all(np.asarray(g))):
+            return
+        for x in np.asarray(v, dtype=np.float64).reshape(-1).tolist():
+            tracer._RECORDER.add_observation(_n, x, _k)
+
+    jax.debug.callback(_cb, True if gate is None else gate, value)
+
+
+def jit_event(
+    name: str,
+    payload: Dict[str, Any],
+    *,
+    gate: Any = None,
+    warn: Optional[str] = None,
+    **labels: Any,
+) -> None:
+    """Point event from inside jit.  ``payload`` maps attr names to
+    traced arrays (delivered host-side as the event's attrs, next to the
+    static ``labels``); ``warn`` additionally logs one line on the
+    ``repro.obs`` logger when the gated event fires."""
+    if not tracer._STATE["enabled"]:
+        return
+    import jax
+    import numpy as np
+
+    names = tuple(payload)
+    static = {str(k): v for k, v in labels.items()}
+
+    def _cb(g: Any, *vals: Any, _n: str = name, _w: Optional[str] = warn) -> None:
+        if not bool(np.all(np.asarray(g))):
+            return
+        attrs: Dict[str, Any] = dict(static)
+        for k, v in zip(names, vals):
+            a = np.asarray(v)
+            attrs[k] = a.item() if a.size == 1 else a.tolist()
+        tracer._RECORDER.add_event(_n, attrs)
+        if _w:
+            _LOG.warning(
+                "%s (%s)", _w,
+                ", ".join(f"{k}={attrs[k]}" for k in names),
+            )
+
+    jax.debug.callback(_cb, True if gate is None else gate, *payload.values())
+
+
+# -- read side ------------------------------------------------------------
+
+def _match(key: tuple, name: str, labels: Dict[str, Any]) -> bool:
+    if key[0] != name:
+        return False
+    have = dict(key[1])
+    return all(have.get(str(k)) == str(v) for k, v in labels.items())
+
+
+def counter_value(name: str, **labels: Any) -> float:
+    """Sum of all counter series matching ``name`` and the given label
+    subset (no labels ⇒ all series of that name)."""
+    rec = tracer._RECORDER
+    with rec._lock:
+        items = list(rec.counters.items())
+    return sum(v for k, v in items if _match(k, name, labels))
+
+
+def hist_values(name: str, **labels: Any) -> List[float]:
+    """Concatenated retained observations of matching histogram series."""
+    rec = tracer._RECORDER
+    with rec._lock:
+        items = [(k, list(h["values"])) for k, h in rec.hists.items()]
+    out: List[float] = []
+    for k, vals in items:
+        if _match(k, name, labels):
+            out.extend(vals)
+    return out
+
+
+def metrics_snapshot(rec: Optional[tracer.Recorder] = None) -> Dict[str, Any]:
+    """JSON-ready snapshot of every metric series."""
+    rec = rec or tracer._RECORDER
+    with rec._lock:
+        return {
+            "counters": [
+                {"name": k[0], "labels": dict(k[1]), "value": v}
+                for k, v in sorted(rec.counters.items())
+            ],
+            "gauges": [
+                {"name": k[0], "labels": dict(k[1]), "value": v}
+                for k, v in sorted(rec.gauges.items())
+            ],
+            "histograms": [
+                {"name": k[0], "labels": dict(k[1]),
+                 "count": h["count"], "sum": h["sum"],
+                 "min": h["min"], "max": h["max"],
+                 "values": list(h["values"])}
+                for k, h in sorted(rec.hists.items())
+            ],
+        }

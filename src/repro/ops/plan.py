@@ -55,6 +55,16 @@ that decision:
     before the classifier dimension existed load with
     ``classifier="tree"`` defaulted (the pre-classifier behaviour), not
     discarded.
+
+Every lookup is observable through ``repro.obs`` (off by default): plan
+lookups emit ``plan_cache.hit`` / ``plan_cache.miss`` counters labelled
+by key family (``family="sort" | "clf" | "stream" | "dist"``), autotune
+sweeps emit ``plan_cache.autotune_sweep`` plus a ``plan.autotune`` span,
+compiled-callable memoization emits ``plan_cache.compiled_hit`` /
+``plan_cache.compiled_miss``, and classifier races emit a
+``classifier.race`` span and a ``classifier.race_winner`` counter — all
+visible in ``obs.summary()`` and the exporters (DESIGN.md §12), so a
+multi-second autotune stall is attributable instead of silent.
 """
 from __future__ import annotations
 
@@ -69,6 +79,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.ips4o import SortConfig, plan_levels
 
 __all__ = ["PlanCache", "StreamPlan", "DistPlan", "get_sorter", "default_cache"]
@@ -355,7 +366,9 @@ class PlanCache:
         if key in self._plans:
             cfg = self._coerce_config(key)
             if cfg is not None:
+                obs.count("plan_cache.hit", family="sort", op=op)
                 return cfg
+        obs.count("plan_cache.miss", family="sort", op=op)
         if tune:
             return self._autotune(op, n, dtype, k, batch)
         return SortConfig()
@@ -380,11 +393,14 @@ class PlanCache:
                 rng.integers(info.min, info.max, count, endpoint=False,
                              dtype=np.dtype(dtype.name)).reshape(shape)
             )
+        cands = _candidates(n, _engines_for(n), dtype.itemsize)
+        obs.count("plan_cache.autotune_sweep", family="sort", op=op)
         best_cfg, best_t = SortConfig(), float("inf")
-        for cfg in _candidates(n, _engines_for(n), dtype.itemsize):
-            t = _bench(_build(op, cfg, k, batch), x)
-            if t < best_t:
-                best_cfg, best_t = cfg, t
+        with obs.trace("plan.autotune", key=key, candidates=len(cands)):
+            for cfg in cands:
+                t = _bench(_build(op, cfg, k, batch), x)
+                if t < best_t:
+                    best_cfg, best_t = cfg, t
         self._plans[key] = {
             "config": asdict(best_cfg),
             "engine": best_cfg.engine,
@@ -454,7 +470,9 @@ class PlanCache:
         key = self._clf_key(n, dtype, dist, batch)
         entry = self._plans.get(key)
         if isinstance(entry, dict) and entry.get("winner") in _CLASSIFIER_RACERS:
+            obs.count("plan_cache.hit", family="clf", dist=dist)
             return entry["winner"]
+        obs.count("plan_cache.miss", family="clf", dist=dist)
         if tune:
             return self._race_classifiers(n, dtype, dist, batch, x)
         return None
@@ -479,10 +497,12 @@ class PlanCache:
                 _synthetic_draw(dist, count, dtype).reshape(shape)
             ).astype(dtype)
         times = {}
-        for clf in _CLASSIFIER_RACERS:
-            f = _build("sort", SortConfig(classifier=clf), None, batch)
-            times[clf] = _bench(f, x)
+        with obs.trace("classifier.race", key=key, dist=dist):
+            for clf in _CLASSIFIER_RACERS:
+                f = _build("sort", SortConfig(classifier=clf), None, batch)
+                times[clf] = _bench(f, x)
         winner = min(times, key=times.get)
+        obs.count("classifier.race_winner", winner=winner, dist=dist)
         self._plans[key] = {
             "winner": winner,
             "us_per_classifier": {
@@ -569,7 +589,9 @@ class PlanCache:
             tile = cfg.get("merge_tile")
             eng = cfg.get("engine")
             if isinstance(tile, int) and eng in ("xla", "pallas"):
+                obs.count("plan_cache.hit", family="stream")
                 return StreamPlan(chunk, fanin, tile, engine or eng)
+        obs.count("plan_cache.miss", family="stream")
         if tune:
             plan = self._autotune_stream(chunk, fanin, dtype)
             if engine is not None:
@@ -657,7 +679,9 @@ class PlanCache:
                 and isinstance(ovs, int)
                 and eng in ("xla", "pallas")
             ):
+                obs.count("plan_cache.hit", family="dist")
                 return DistPlan(n_local, d, float(slack), ovs, engine or eng)
+        obs.count("plan_cache.miss", family="dist")
         if tune:
             plan = self._autotune_dist(n_local, d, dtype)
             if engine is not None:
@@ -791,8 +815,11 @@ class PlanCache:
         # tune=True with no persisted plan must not be satisfied by an
         # untuned memoized callable — run the sweep and rebuild
         if f is None or (tune and key not in self._plans):
+            obs.count("plan_cache.compiled_miss", op=op)
             f = _build(op, self.config_for(op, n, dtype, k, tune=tune, batch=batch), k, batch)
             self._compiled[key] = f
+        else:
+            obs.count("plan_cache.compiled_hit", op=op)
         return f
 
 

@@ -22,6 +22,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.classify import resolve_classifier
 from repro.core.ips4o import SortConfig, ips4o_sort, resolve_engine, tiebreak_passes
 from repro.ops import keyspace
@@ -91,12 +92,17 @@ def sort(
     ([1, 2], [10, 20])
     """
     cfg = with_engine(cfg, engine, keys, classifier)
-    enc = keyspace.encode(keys)
-    if values is None:
-        out = ips4o_sort(enc, cfg=cfg)
-        return keyspace.decode(out, keys.dtype)
-    out, vs = ips4o_sort(enc, values, cfg=cfg)
-    return keyspace.decode(out, keys.dtype), vs
+    with obs.trace(
+        "ops.sort", n=keys.shape[0], dtype=str(keys.dtype), engine=cfg.engine
+    ):
+        enc = keyspace.encode(keys)
+        if values is None:
+            out = keyspace.decode(ips4o_sort(enc, cfg=cfg), keys.dtype)
+        else:
+            k, vs = ips4o_sort(enc, values, cfg=cfg)
+            out = (keyspace.decode(k, keys.dtype), vs)
+        obs.block(out)  # eager path: the span measures real execution
+    return out
 
 
 def argsort(
@@ -118,9 +124,10 @@ def argsort(
     idx = jnp.arange(n, dtype=jnp.int32)
     if n <= 1:
         return idx
-    _, order = ips4o_sort(
-        keyspace.encode(keys), idx, cfg=with_engine(cfg, engine, keys, classifier)
-    )
+    cfg = with_engine(cfg, engine, keys, classifier)
+    with obs.trace("ops.argsort", n=n, dtype=str(keys.dtype), engine=cfg.engine):
+        _, order = ips4o_sort(keyspace.encode(keys), idx, cfg=cfg)
+        obs.block(order)
     return order
 
 

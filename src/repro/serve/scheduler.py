@@ -47,6 +47,7 @@ from typing import List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.ops import plan
 
 __all__ = ["Request", "Scheduler", "admit_many"]
@@ -105,6 +106,7 @@ class Scheduler:
         combined = self.backlog + [reqs[i] for i in order]
         rem = np.asarray([r.remaining for r in combined], np.int64)
         self.backlog = [combined[i] for i in np.argsort(rem, kind="stable")]
+        obs.count("serve.backlog_attached", q)
 
     def next_batch(self, *, mesh=None, axes="data") -> List[Request]:
         """Admit up to batch_size requests, shortest-remaining-first,
@@ -133,40 +135,45 @@ class Scheduler:
         kk = min(self.batch_size, len(self.queue) + len(self.backlog))
         if not kk:
             return []
-        order = self._select_live(
-            min(self.batch_size, len(self.queue)), mesh=mesh, axes=axes
-        )
-        if not self.backlog:
-            return self._take(order)
-        bk = np.asarray(
-            [r.remaining for r in self.backlog[: self.batch_size]], np.int64
-        )
-        lk = np.asarray([self.queue[i].remaining for i in order], np.int64)
-        if max(bk.max(initial=0), lk.max(initial=0)) < _SENTINEL:
-            from repro.stream import merge  # lazy: stream layers above serve
-
-            _, src = merge(
-                [jnp.asarray(bk.astype(np.int32)), jnp.asarray(lk.astype(np.int32))],
-                values=[
-                    jnp.arange(len(bk), dtype=jnp.int32),
-                    len(bk) + jnp.arange(len(lk), dtype=jnp.int32),
-                ],
+        with obs.trace("serve.next_batch", queue=len(self.queue),
+                       backlog=len(self.backlog)):
+            order = self._select_live(
+                min(self.batch_size, len(self.queue)), mesh=mesh, axes=axes
             )
-            src = np.asarray(src)
-        else:
-            # remaining overflows int32 (same hazard the composite path
-            # guards): host-side stable merge — the stable argsort of the
-            # concatenation of two sorted runs is exactly their merge
-            src = np.argsort(np.concatenate([bk, lk]), kind="stable")
-        src = src[:kk]
-        n_back = int(np.sum(src < len(bk)))  # a prefix of the backlog run
-        batch: List[Request] = []
-        live_iter = iter(self._take(order[: kk - n_back]))
-        back_iter = iter(self.backlog[:n_back])
-        self.backlog = self.backlog[n_back:]
-        for s in src:
-            batch.append(next(back_iter) if s < len(bk) else next(live_iter))
-        return batch
+            if not self.backlog:
+                batch = self._take(order)
+                obs.count("serve.admitted", len(batch))
+                return batch
+            bk = np.asarray(
+                [r.remaining for r in self.backlog[: self.batch_size]], np.int64
+            )
+            lk = np.asarray([self.queue[i].remaining for i in order], np.int64)
+            if max(bk.max(initial=0), lk.max(initial=0)) < _SENTINEL:
+                from repro.stream import merge  # lazy: stream layers above serve
+
+                _, src = merge(
+                    [jnp.asarray(bk.astype(np.int32)), jnp.asarray(lk.astype(np.int32))],
+                    values=[
+                        jnp.arange(len(bk), dtype=jnp.int32),
+                        len(bk) + jnp.arange(len(lk), dtype=jnp.int32),
+                    ],
+                )
+                src = np.asarray(src)
+            else:
+                # remaining overflows int32 (same hazard the composite path
+                # guards): host-side stable merge — the stable argsort of the
+                # concatenation of two sorted runs is exactly their merge
+                src = np.argsort(np.concatenate([bk, lk]), kind="stable")
+            src = src[:kk]
+            n_back = int(np.sum(src < len(bk)))  # a prefix of the backlog run
+            batch: List[Request] = []
+            live_iter = iter(self._take(order[: kk - n_back]))
+            back_iter = iter(self.backlog[:n_back])
+            self.backlog = self.backlog[n_back:]
+            for s in src:
+                batch.append(next(back_iter) if s < len(bk) else next(live_iter))
+            obs.count("serve.admitted", len(batch))
+            return batch
 
     def _select_live(self, kk: int, mesh=None, axes="data") -> np.ndarray:
         """Selection order (queue positions) of the live admission
@@ -274,6 +281,11 @@ def admit_many(schedulers: Sequence[Scheduler]) -> List[List[Request]]:
     n_max = max(lens, default=0)
     if n_max == 0 and not any(s.backlog for s in schedulers):
         return results
+    with obs.trace("serve.admit_many", schedulers=len(schedulers)):
+        return _admit_many(schedulers, results, lens, n_max)
+
+
+def _admit_many(schedulers, results, lens, n_max):
     n_pad = 1 << (n_max - 1).bit_length() if n_max > 1 else 1
 
     rows: List[np.ndarray] = []
@@ -292,6 +304,7 @@ def admit_many(schedulers: Sequence[Scheduler]) -> List[List[Request]]:
             rem = np.asarray([r.remaining for r in s.queue], np.int64)
             order = np.lexsort((np.arange(q), rem))[: min(s.batch_size, q)]
             results[i] = s._take(order)
+            obs.count("serve.admitted", len(results[i]))
             continue
         keys = np.full(n_pad, _SENTINEL, np.int32)
         keys[:q] = comp
@@ -313,4 +326,5 @@ def admit_many(schedulers: Sequence[Scheduler]) -> List[List[Request]]:
         o = order[j]
         o = o[o < q][: min(s.batch_size, q)]  # drop sentinel pad slots
         results[i] = s._take(o)
+        obs.count("serve.admitted", len(results[i]))
     return results

@@ -17,6 +17,12 @@ merge (``stream.merge``) layers.  The common shape:
 stream at all: they carry a bounded candidate / distinct-key buffer and
 refine it per chunk with the ops-layer primitives (``bottomk``/``topk``,
 ``unique``) plus one 2-way merge.
+
+With ``repro.obs`` enabled, the tournament reports itself: per-round
+``stream.merge_round`` spans under a ``stream.external_sort`` /
+``stream.external_argsort`` root, the host spill volume as a
+``stream.spill_bytes`` counter, and round / chunk counts
+(``stream.tournament_rounds``, ``stream.chunks``) — DESIGN.md §12.
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.ops import keyspace, plan
 from repro.stream.merge import merge
 from repro.stream.runs import Source, form_argsort_runs, form_runs, iter_chunks
@@ -67,6 +74,13 @@ def _decode(u, dtype):
     return np.asarray(f(jnp.asarray(u)))
 
 
+def _spill(a):
+    """Device -> host spill with the byte volume counted (obs off: free)."""
+    out = np.asarray(a)
+    obs.count("stream.spill_bytes", out.nbytes)
+    return out
+
+
 def _merge_pass(runs, cfg, payloads=None):
     """One tournament round over host-resident runs: merge adjacent pairs
     on device, spill each result back to host."""
@@ -78,15 +92,16 @@ def _merge_pass(runs, cfg, payloads=None):
         if payloads is None:
             f = _jitted(key, lambda: lambda x, y: merge(
                 [x, y], engine=cfg.engine, tile=cfg.merge_tile))
-            out_k.append(np.asarray(f(a, b)))
+            out_k.append(_spill(f(a, b)))
         else:
             f = _jitted(key, lambda: lambda x, y, vx, vy: merge(
                 [x, y], values=[vx, vy],
                 engine=cfg.engine, tile=cfg.merge_tile))
             k, v = f(a, b, jnp.asarray(payloads[i]), jnp.asarray(payloads[i + 1]))
-            out_k.append(np.asarray(k))
-            out_v.append(np.asarray(v))
+            out_k.append(_spill(k))
+            out_v.append(_spill(v))
     if len(runs) % 2:
+        # the odd run out rides along untouched: not a spill, no new bytes
         out_k.append(np.asarray(runs[-1]))
         if payloads is not None:
             out_v.append(np.asarray(payloads[-1]))
@@ -122,10 +137,16 @@ def external_sort(
         return np.zeros((0,), np.asarray(data).dtype if isinstance(data, np.ndarray) else np.float32)
     dtype = runs[0].dtype
     cfg = cache.stream_plan(chunk_size, len(runs), dtype, tune=tune, engine=engine)
-    level = _encode_runs(runs)  # device arrays round 0; host after each spill
-    while len(level) > 1:
-        level, _ = _merge_pass(level, cfg)
-    return _decode(level[0], dtype)
+    with obs.trace("stream.external_sort", chunks=len(runs),
+                   chunk_size=chunk_size, engine=cfg.engine):
+        level = _encode_runs(runs)  # device arrays round 0; host after each spill
+        rounds = 0
+        while len(level) > 1:
+            with obs.trace("stream.merge_round", fanin=len(level)):
+                level, _ = _merge_pass(level, cfg)
+            rounds += 1
+        obs.count("stream.tournament_rounds", rounds)
+        return _decode(level[0], dtype)
 
 
 def external_argsort(
@@ -152,11 +173,17 @@ def external_argsort(
         return np.zeros((0,), np.int32)
     cfg = cache.stream_plan(chunk_size, len(pairs), pairs[0][0].dtype,
                             tune=tune, engine=engine)
-    keys = _encode_runs([k for k, _ in pairs])  # only indices come back out
-    idxs = [i for _, i in pairs]
-    while len(keys) > 1:
-        keys, idxs = _merge_pass(keys, cfg, idxs)
-    return np.asarray(idxs[0])
+    with obs.trace("stream.external_argsort", chunks=len(pairs),
+                   chunk_size=chunk_size, engine=cfg.engine):
+        keys = _encode_runs([k for k, _ in pairs])  # only indices come back out
+        idxs = [i for _, i in pairs]
+        rounds = 0
+        while len(keys) > 1:
+            with obs.trace("stream.merge_round", fanin=len(keys)):
+                keys, idxs = _merge_pass(keys, cfg, idxs)
+            rounds += 1
+        obs.count("stream.tournament_rounds", rounds)
+        return np.asarray(idxs[0])
 
 
 def streaming_topk(
@@ -192,30 +219,32 @@ def streaming_topk(
     buf_u = buf_i = None  # encoded-ascending candidates + global indices
     key_dtype = None
     offset = 0
-    for chunk in iter_chunks(data, chunk_size):
-        n = chunk.shape[0]
-        if n == 0:
-            continue
-        dev = jax.device_put(jnp.asarray(chunk))
-        key_dtype = dev.dtype
-        vals, idx = cache.get_sorter(n, dev.dtype, op, k=min(k, n))(dev)
-        enc = _jitted(("enc", vals.shape, str(dev.dtype), largest), lambda: (
-            (lambda v: ~keyspace.encode(v)) if largest else keyspace.encode))
-        u, gi = enc(vals), idx + jnp.int32(offset)
+    with obs.trace("stream.topk", k=k, chunk_size=chunk_size, largest=largest):
+        for chunk in iter_chunks(data, chunk_size):
+            n = chunk.shape[0]
+            if n == 0:
+                continue
+            obs.count("stream.chunks", op="topk")
+            dev = jax.device_put(jnp.asarray(chunk))
+            key_dtype = dev.dtype
+            vals, idx = cache.get_sorter(n, dev.dtype, op, k=min(k, n))(dev)
+            enc = _jitted(("enc", vals.shape, str(dev.dtype), largest), lambda: (
+                (lambda v: ~keyspace.encode(v)) if largest else keyspace.encode))
+            u, gi = enc(vals), idx + jnp.int32(offset)
+            if buf_u is None:
+                buf_u, buf_i = u[:k], gi[:k]
+            else:
+                mkey = ("topk-merge", buf_u.shape, u.shape, str(u.dtype), k)
+                f = _jitted(mkey, lambda: lambda a, b, ia, ib: tuple(
+                    x[:k] for x in merge([a, b], values=[ia, ib])))
+                buf_u, buf_i = f(buf_u, u, buf_i, gi)
+            offset += n
         if buf_u is None:
-            buf_u, buf_i = u[:k], gi[:k]
-        else:
-            mkey = ("topk-merge", buf_u.shape, u.shape, str(u.dtype), k)
-            f = _jitted(mkey, lambda: lambda a, b, ia, ib: tuple(
-                x[:k] for x in merge([a, b], values=[ia, ib])))
-            buf_u, buf_i = f(buf_u, u, buf_i, gi)
-        offset += n
-    if buf_u is None:
-        raise ValueError("streaming_topk over an empty stream")
-    dec = _jitted(("dec", buf_u.shape, str(key_dtype), largest), lambda: (
-        (lambda u: keyspace.decode(~u, key_dtype)) if largest
-        else (lambda u: keyspace.decode(u, key_dtype))))
-    return np.asarray(dec(buf_u)), np.asarray(buf_i)
+            raise ValueError("streaming_topk over an empty stream")
+        dec = _jitted(("dec", buf_u.shape, str(key_dtype), largest), lambda: (
+            (lambda u: keyspace.decode(~u, key_dtype)) if largest
+            else (lambda u: keyspace.decode(u, key_dtype))))
+        return np.asarray(dec(buf_u)), np.asarray(buf_i)
 
 
 def streaming_group_by(
@@ -249,6 +278,7 @@ def streaming_group_by(
         n = chunk.shape[0]
         if n == 0:
             continue
+        obs.count("stream.chunks", op="group_by")
         dev = jax.device_put(jnp.asarray(chunk))
         key_dtype = dev.dtype
         f = _jitted(("unique", dev.shape, str(dev.dtype)), lambda: (

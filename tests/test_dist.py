@@ -317,6 +317,48 @@ def test_resplit_retry_converges():
         assert np.all(shard[:-1] <= shard[1:])
 
 
+@needs_8
+def test_resplit_retry_obs_metrics():
+    """The same converging-retry configuration, with ``repro.obs`` on: the
+    exchange records >= 2 active re-split rounds (round 0 overflowed, a
+    retry fixed it) and per-level collective volume; the retries=0 config
+    records a ``dist.exchange_overflow`` event whose per-round fill shows
+    capacity genuinely exceeded."""
+    from repro import obs
+
+    x = make_input("Exponential", _N, np.float32, seed=42)
+    mesh = jax.make_mesh((8,), ("data",))
+    obs.enabled(True)
+    obs.reset()
+    jax.clear_caches()  # jits traced while disabled carry no obs hooks
+    try:
+        _, _, ovf2 = _run_sort(
+            mesh, "data", x, slack=1.25, oversample=8, retries=2
+        )
+        jax.effects_barrier()
+        assert not ovf2.any()
+        rounds = obs.hist_values("dist.resplit_rounds")
+        assert rounds and max(rounds) >= 2, rounds
+        vol = obs.hist_values("dist.collective_bytes")
+        assert vol and all(v > 0 for v in vol), vol
+        assert not obs.events("dist.exchange_overflow")
+
+        obs.reset()
+        _, _, ovf0 = _run_sort(
+            mesh, "data", x, slack=1.25, oversample=8, retries=0
+        )
+        jax.effects_barrier()
+        assert ovf0.any()
+        evs = obs.events("dist.exchange_overflow")
+        assert evs, "overflow must record an event"
+        fill = evs[0]["attrs"]["round_fill"]
+        assert max(np.atleast_1d(fill)) > 1.0, fill
+    finally:
+        obs.enabled(False)
+        obs.reset()
+        jax.clear_caches()
+
+
 # -- rewired callers at d = 8 ----------------------------------------------
 
 
