@@ -65,8 +65,8 @@ def render(
     committed baseline; fresh-only and baseline-only rows are counted in
     the per-bench caption.
     """
-    benches: Dict[str, List[Dict]] = baseline.get("benches", {})
-    fresh_benches: Dict[str, List[Dict]] = (fresh or {}).get("benches", {})
+    benches: Dict[str, List[Dict]] = baseline.get("benches") or {}
+    fresh_benches: Dict[str, List[Dict]] = (fresh or {}).get("benches") or {}
     fresh_rows = {
         row_identity(b, r): r for b, rows in fresh_benches.items() for r in rows
     }
@@ -77,6 +77,12 @@ def render(
         meta.append(f"fresh run: {fresh.get('generated_at', '?')} "
                     f"(`{fresh.get('backend', '?')}`)")
     lines += ["; ".join(meta), ""]
+    if not benches and not fresh_benches:
+        # an empty trajectory (fresh checkout, aborted run, hand-pruned
+        # json) is a valid dashboard — say so instead of rendering nothing
+        lines += ["*(empty trajectory: no benches recorded — run "
+                  "`python -m benchmarks.run` to populate)*", ""]
+        return "\n".join(lines) + "\n"
     for bench in sorted(set(benches) | set(fresh_benches)):
         rows = benches.get(bench, [])
         extra = [
@@ -102,7 +108,14 @@ def render(
                 v = r.get(f)
                 if fr is not None and is_tracked_metric(f) and f in fr:
                     base_v = v if isinstance(v, (int, float)) else None
-                    cells.append(_fmt(f, fr[f]) + _delta(base_v, float(fr[f])))
+                    try:
+                        fresh_v = float(fr[f])
+                    except (TypeError, ValueError):
+                        # non-numeric tracked cell (a crashed run wrote a
+                        # marker string): show it verbatim, no delta
+                        cells.append(_fmt(f, fr[f]))
+                    else:
+                        cells.append(_fmt(f, fr[f]) + _delta(base_v, fresh_v))
                 else:
                     cells.append(_fmt(f, v))
             body.append("| " + " | ".join(cells) + " |")

@@ -10,9 +10,21 @@ that instantiation on a device mesh, one exchange level per mesh axis:
   api.py       sharded ops: sort / argsort / topk / bottomk / group_by
                behind the same engine seam and keyspace encoding as
                ``repro.ops``
+  elastic.py   the same sort as a checkpointed level-boundary state
+               machine: restorable after shard loss (DESIGN.md §13)
 
+Every exchange also takes ``overlap=True`` (half-shard staggering of the
+collective against local partition work) and ``order="auto"`` (topology-
+aware level ordering) — see DESIGN.md §13.
 """
 from repro.dist.api import argsort, bottomk, group_by, sort, topk
-from repro.dist.levels import Level, plan_schedule
+from repro.dist.elastic import sort_elastic
+from repro.dist.levels import (
+    Level, axis_bandwidths, order_axes, plan_schedule, schedule_cost,
+)
 
-__all__ = ["sort", "argsort", "topk", "bottomk", "group_by", "Level", "plan_schedule"]
+__all__ = [
+    "sort", "argsort", "topk", "bottomk", "group_by", "sort_elastic",
+    "Level", "plan_schedule", "order_axes", "schedule_cost",
+    "axis_bandwidths",
+]

@@ -32,10 +32,13 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.classify import resolve_classifier
 from repro.core.ips4o import SortConfig, ips4o_sort, resolve_engine
 from repro.dist.exchange import compact_valid, exchange_level, tile_for
-from repro.dist.levels import AxisNames, normalize_axes, plan_schedule
+from repro.dist.levels import (
+    AxisNames, normalize_axes, order_axes, plan_schedule,
+)
 from repro.ops import keyspace
 from repro.ops.topk import smallest_encoded
 
@@ -79,7 +82,35 @@ def _plan_params(
         plan.slack if slack is None else float(slack),
         plan.oversample if oversample is None else int(oversample),
         plan.engine,
+        plan.axis_order,
     )
+
+
+def _resolve_order(
+    order: Optional[str], names: Tuple[str, ...], mesh: Mesh, n_local: int,
+    d: int, dtype, planned: Tuple[str, ...], slack: float, oversample: int,
+) -> Tuple[str, ...]:
+    """``order="auto"``: topology-aware axis ordering (DESIGN.md §13.4).
+
+    A persisted ``axis_order`` from the ``dist:`` plan wins when it names
+    exactly this call's axes; otherwise the static cost model picks the
+    order and records it as a plan dimension for the next call.  The
+    default (None / "given") keeps the caller's order — bit-compatible
+    with every pre-existing call site.
+    """
+    if order not in (None, "given", "auto"):
+        raise ValueError(f"order must be None, 'given' or 'auto', got {order!r}")
+    if order in (None, "given") or len(names) < 2:
+        return names
+    if tuple(sorted(planned)) == tuple(sorted(names)):
+        return tuple(planned)
+    chosen = order_axes(
+        dict(mesh.shape), names, n_local, slack=slack, oversample=oversample
+    )
+    from repro.ops.plan import default_cache
+
+    default_cache.record_dist_axis_order(n_local, d, dtype, chosen)
+    return chosen
 
 
 def _finish_local(arrays, m, cfg: SortConfig, engine: str):
@@ -101,28 +132,33 @@ def _finish_local(arrays, m, cfg: SortConfig, engine: str):
     )
 
 
+def _pre_exchange(arrays, n_local: int, ax, d: int):
+    """Balanced pre-exchange over the FULL mesh domain: one round-robin
+    all_to_all gives every shard a representative slice of every stripe,
+    bounding per-pair counts for ANY input placement (the distributed
+    cousin of the paper's beta overpartitioning).  Runs under shard_map."""
+    chunk = n_local // d
+
+    def pre(a):
+        t = jax.lax.all_to_all(
+            a.reshape((d, chunk) + a.shape[1:]),
+            ax, split_axis=0, concat_axis=0, tiled=True,
+        )
+        return t.reshape((n_local,) + a.shape[1:])
+
+    return jax.tree.map(pre, arrays)
+
+
 def _sort_body(
     arrays, n_local: int, names: Tuple[str, ...], schedule, cfg: SortConfig,
     engine: str, retries: int, d: int, classifier: str = "tree",
+    overlap: bool = False,
 ):
     """Per-shard body: balanced pre-exchange, the explicit level loop, and
     the local finish.  Runs under ``shard_map``."""
     ax = _axis_arg(names)
     if d > 1:
-        # balanced pre-exchange over the FULL mesh domain: one round-robin
-        # all_to_all gives every shard a representative slice of every
-        # stripe, bounding per-pair counts for ANY input placement (the
-        # distributed cousin of the paper's beta overpartitioning).
-        chunk = n_local // d
-
-        def pre(a):
-            t = jax.lax.all_to_all(
-                a.reshape((d, chunk) + a.shape[1:]),
-                ax, split_axis=0, concat_axis=0, tiled=True,
-            )
-            return t.reshape((n_local,) + a.shape[1:])
-
-        arrays = jax.tree.map(pre, arrays)
+        arrays = _pre_exchange(arrays, n_local, ax, d)
 
     m = jnp.asarray(n_local, jnp.int32)
     overflow = jnp.asarray(False)
@@ -134,6 +170,7 @@ def _sort_body(
             engine=engine, tile=cfg.tile, seed=cfg.seed,
             level_idx=i, retries=retries,
             classifier=classifier if i == 0 else "tree",
+            overlap=overlap,
         )
         overflow = jnp.logical_or(overflow, ovf)
     out = _finish_local(arrays, m, cfg, engine)
@@ -173,6 +210,8 @@ def sort(
     engine: Optional[str] = None,
     classifier: Optional[str] = None,
     tune: bool = False,
+    overlap: bool = False,
+    order: Optional[str] = None,
 ):
     """Multi-level distributed sort of a globally sharded key array.
 
@@ -194,16 +233,36 @@ def sort(
         level 0, skipping that round's sampling collective; exchange
         levels past the first (and every re-split round) stay
         splitter-based.
+      overlap: stagger each level's exchange against local partition work
+        via the half-shard protocol (DESIGN.md §13) — bit-identical
+        results, collectives issued early enough to hide behind compute.
+      order: None/"given" keeps the caller's axis order; "auto" reorders
+        the level schedule by the topology cost model (DESIGN.md §13.4),
+        consulting/recording the ``dist:`` plan's ``axis_order``.  The
+        output contract follows the *chosen* order: shard ranges
+        concatenate in the reordered spec's block order.
 
     Returns (sorted, counts, overflow) — with values,
     (sorted, sorted_values, counts, overflow): shard i of ``sorted`` holds
     its globally-ordered range with sentinel padding at the tail,
     ``counts`` (d,) the valid prefix per shard, ``overflow`` (d,) True only
     if some exchange truncated after exhausting its re-split retries.
+
+    >>> import jax, jax.numpy as jnp
+    >>> mesh = jax.make_mesh((1,), ("data",))
+    >>> out, counts, ovf = sort(jnp.asarray([3.0, 1.0, 2.0, 0.0]), mesh)
+    >>> out[: int(counts[0])].tolist()
+    [0.0, 1.0, 2.0, 3.0]
+    >>> bool(ovf.any())
+    False
     """
     names, d, n_local = _prepare(keys, mesh, axes)
-    slack, oversample, plan_engine = _plan_params(
+    slack, oversample, plan_engine, planned_order = _plan_params(
         n_local, d, keys.dtype, slack, oversample, tune
+    )
+    names = _resolve_order(
+        order, names, mesh, n_local, d, keys.dtype, planned_order,
+        slack, oversample,
     )
     eng = _resolve_dist_engine(engine, cfg, plan_engine, n_local, keys.dtype)
     clf = resolve_classifier(classifier or cfg.classifier, n_local, keys.dtype)
@@ -214,10 +273,15 @@ def sort(
     body = functools.partial(
         _sort_body, n_local=n_local, names=names, schedule=schedule,
         cfg=cfg_run, engine=eng, retries=retries, d=d, classifier=clf,
+        overlap=overlap,
     )
     ax = _axis_arg(names)
     spec = P(ax)
     enc = keyspace.encode(keys)
+    span = obs.trace(
+        "dist.sort", axes=",".join(names), levels=len(schedule), d=d,
+        overlap="on" if overlap else "off", engine=eng,
+    )
 
     if values is None:
         def run(k):
@@ -226,7 +290,8 @@ def sort(
 
         f = shard_map(run, mesh=mesh, in_specs=(spec,),
                       out_specs=(spec, spec, spec), check_rep=False)
-        out_k, counts, ovf = f(enc)
+        with span:
+            out_k, counts, ovf = f(enc)
         return keyspace.decode(out_k, keys.dtype), counts, ovf
 
     vspecs = jax.tree.map(lambda a: P(ax, *([None] * (a.ndim - 1))), values)
@@ -240,7 +305,8 @@ def sort(
     # for this false positive); no output here claims replication anyway
     f = shard_map(run, mesh=mesh, in_specs=(spec, vspecs),
                   out_specs=(spec, vspecs, spec, spec), check_rep=False)
-    out_k, out_v, counts, ovf = f(enc, values)
+    with span:
+        out_k, out_v, counts, ovf = f(enc, values)
     return keyspace.decode(out_k, keys.dtype), out_v, counts, ovf
 
 
@@ -256,16 +322,31 @@ def argsort(
     engine: Optional[str] = None,
     classifier: Optional[str] = None,
     tune: bool = False,
+    overlap: bool = False,
+    order: Optional[str] = None,
 ):
     """Distributed argsort: global input positions ride as the payload.
+
+    ``overlap`` / ``order`` behave exactly as in :func:`sort` (the global
+    indices ride the same half-shard frames).
 
     Returns (order, counts, overflow): shard i's valid prefix of ``order``
     holds the global indices of its sorted range — concatenating the valid
     prefixes yields a permutation sorting the global array.
+
+    >>> import jax, jax.numpy as jnp
+    >>> mesh = jax.make_mesh((1,), ("data",))
+    >>> idx, counts, ovf = argsort(jnp.asarray([30, 10, 20, 0]), mesh)
+    >>> idx[: int(counts[0])].tolist()
+    [3, 1, 2, 0]
     """
     names, d, n_local = _prepare(keys, mesh, axes)
-    slack, oversample, plan_engine = _plan_params(
+    slack, oversample, plan_engine, planned_order = _plan_params(
         n_local, d, keys.dtype, slack, oversample, tune
+    )
+    names = _resolve_order(
+        order, names, mesh, n_local, d, keys.dtype, planned_order,
+        slack, oversample,
     )
     eng = _resolve_dist_engine(engine, cfg, plan_engine, n_local, keys.dtype)
     clf = resolve_classifier(classifier or cfg.classifier, n_local, keys.dtype)
@@ -276,6 +357,7 @@ def argsort(
     body = functools.partial(
         _sort_body, n_local=n_local, names=names, schedule=schedule,
         cfg=cfg_run, engine=eng, retries=retries, d=d, classifier=clf,
+        overlap=overlap,
     )
     ax = _axis_arg(names)
     spec = P(ax)
@@ -309,6 +391,12 @@ def bottomk(
     candidates are gathered, and one shard-local partial sort finishes.
     Results are replicated (same on every shard), NaN-safe like
     ``ops.bottomk``.
+
+    >>> import jax, jax.numpy as jnp
+    >>> mesh = jax.make_mesh((1,), ("data",))
+    >>> v, i = bottomk(jnp.asarray([4.0, 1.0, 3.0, 2.0]), 2, mesh)
+    >>> (v.tolist(), i.tolist())
+    ([1.0, 2.0], [1, 3])
     """
     return _rank_k(
         keys, k, mesh, axes, cfg=cfg, engine=engine, classifier=classifier,
@@ -328,7 +416,14 @@ def topk(
 ) -> Tuple[jax.Array, jax.Array]:
     """The k globally largest keys (descending) with their global indices;
     ``bottomk`` of the complemented keyspace codes (``~u`` reverses the
-    total order), like ``ops.topk``."""
+    total order), like ``ops.topk``.
+
+    >>> import jax, jax.numpy as jnp
+    >>> mesh = jax.make_mesh((1,), ("data",))
+    >>> v, i = topk(jnp.asarray([4.0, 1.0, 3.0, 2.0]), 2, mesh)
+    >>> (v.tolist(), i.tolist())
+    ([4.0, 3.0], [0, 2])
+    """
     return _rank_k(
         keys, k, mesh, axes, cfg=cfg, engine=engine, classifier=classifier,
         largest=True,
@@ -392,6 +487,7 @@ def group_by(
     cfg: SortConfig = SortConfig(),
     engine: Optional[str] = None,
     classifier: Optional[str] = None,
+    overlap: bool = False,
 ):
     """Sharded grouping: multi-level sort by key, then per-shard run starts.
 
@@ -400,10 +496,17 @@ def group_by(
     (a run crossing a shard boundary re-starts on the next shard — merging
     boundary runs is one host-side concat of adjacent shard edges; the
     global sort guarantees a key spans only adjacent shards).
+
+    >>> import jax, jax.numpy as jnp
+    >>> mesh = jax.make_mesh((1,), ("data",))
+    >>> ks, starts, counts, ovf = group_by(jnp.asarray([2, 1, 2, 1]), mesh)
+    >>> m = int(counts[0])
+    >>> (ks[:m].tolist(), starts[:m].tolist())
+    ([1, 1, 2, 2], [True, False, True, False])
     """
     res = sort(
         keys, mesh, axes, values=values, slack=slack, retries=retries,
-        cfg=cfg, engine=engine, classifier=classifier,
+        cfg=cfg, engine=engine, classifier=classifier, overlap=overlap,
     )
     if values is None:
         out_k, counts, ovf = res

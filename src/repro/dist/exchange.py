@@ -36,6 +36,25 @@ logs a one-line warning; converged exchanges record the active re-split
 round count (``dist.resplit_rounds``) and per-shard collective volume
 (``dist.collective_bytes``) per level (DESIGN.md §12).
 
+**Overlap-scheduled exchange** (``overlap=True``, DESIGN.md §13): the
+sampling/classify/re-split rounds are a *global* barrier by construction
+(the overflow verdict needs every shard's full-shard counts before any
+element may travel), but everything after the destinations are fixed is
+not.  The overlap path splits the shard into two position-halves and
+staggers partition/pack against the wire: half A is partitioned, packed,
+and its ``all_to_all`` *issued* before half B's partition even starts, so
+XLA's latency-hiding scheduler can run half B's local partition while half
+A's collective is in flight.  Arrivals are reassembled sender-major with
+A-slots before B-slots — exactly the stable order of the synchronous
+exchange — and the truncation budget is shared across the halves
+(``send_B = min(counts_B, cap - send_A)``), so the overlapped exchange is
+**bit-identical** to the synchronous one, overflow flag, truncation and
+payloads included.  The cost is a larger padded frame (each half carries
+the full per-chunk capacity, since either half could in principle hold a
+whole chunk); real payload bytes on the wire are unchanged, and
+``repro.obs`` records the overlappable fraction per level
+(``dist.overlap_efficiency``).
+
 **Radix destinations** (``classifier="radix"``, DESIGN.md §9): when the
 level's group count is a power of two and the keys are keyspace-encoded
 (unsigned), round 0 can skip the sampling collective entirely and send
@@ -66,7 +85,13 @@ Pytree = Any
 
 
 def tile_for(n: int, pref: int) -> int:
-    """A partition tile that divides ``n`` (static), at most ``pref``."""
+    """A partition tile that divides ``n`` (static), at most ``pref``.
+
+    >>> tile_for(48, 32)
+    16
+    >>> tile_for(7, 4)
+    1
+    """
     return max(1, math.gcd(n, pref))
 
 
@@ -77,6 +102,12 @@ def compact_valid(
 
     Key order among valid elements is preserved because the block
     partition is stable (DESIGN.md §2).
+
+    >>> import jax.numpy as jnp
+    >>> out = compact_valid({"k": jnp.asarray([9, 7, 8, 6])},
+    ...                     jnp.asarray([False, True, False, True]), 2, "xla")
+    >>> out["k"].tolist()
+    [7, 6, 9, 8]
     """
     dest = jnp.where(valid, 0, 1).astype(jnp.int32)
     out, _ = stable_partition(dest, arrays, 2, tile, engine=engine)
@@ -147,6 +178,7 @@ def exchange_level(
     level_idx: int,
     retries: int = 2,
     classifier: str = "tree",
+    overlap: bool = False,
 ) -> Tuple[Pytree, jax.Array, jax.Array]:
     """Run one level's exchange on this shard's ``arrays`` dict.
 
@@ -162,6 +194,23 @@ def exchange_level(
     to the sampled-splitter path when the group count is not a power of
     two or the keys are not unsigned.  Re-split rounds are always
     splitter-based.
+
+    ``overlap=True`` takes the half-shard staggered exchange (module
+    docstring): bit-identical results, with half B's partition/pack
+    overlappable against half A's in-flight collective.  It silently
+    stays synchronous on a degenerate axis or an odd shard size.
+
+    The degenerate (groups == 1) level needs no collective and therefore
+    no ``shard_map`` context — the d = 1 contract in one call:
+
+    >>> import jax.numpy as jnp
+    >>> from repro.dist.levels import plan_schedule
+    >>> (lv,) = plan_schedule({"data": 1}, "data", 256)
+    >>> out, m, ovf = exchange_level(
+    ...     {"k": jnp.arange(256, dtype=jnp.uint32)}, jnp.int32(256), lv,
+    ...     engine="xla", tile=64, seed=0, level_idx=0)
+    >>> (out["k"].shape[0], int(m), bool(ovf))   # padded to n_out, no loss
+    (512, 256, False)
     """
     n = arrays["k"].shape[0]
     g, cap = level.groups, level.capacity
@@ -303,6 +352,12 @@ def exchange_level(
             level=str(level_idx), groups=g, capacity=cap,
         )
 
+    if overlap and n % 2 == 0:
+        return _exchange_halves(
+            arrays, dest_keep, overflowed, level,
+            engine=engine, tile=tile, level_idx=level_idx, track=track,
+        )
+
     # stable block partition with a trash bucket for pads (never sent)
     parts, offsets = stable_partition(
         dest_keep, arrays, g + 1, tile_for(n, tile), engine=engine
@@ -351,3 +406,106 @@ def exchange_level(
     ).reshape(-1)
     out = compact_valid(flat, arrived, tile_for(g * cap, tile), engine)
     return out, m_next, overflowed
+
+
+def _exchange_halves(
+    arrays: Pytree,
+    dest_keep: jax.Array,
+    overflowed: jax.Array,
+    level: Level,
+    *,
+    engine: str,
+    tile: int,
+    level_idx: int,
+    track: bool,
+) -> Tuple[Pytree, jax.Array, jax.Array]:
+    """The staggered tail of an overlapped exchange (module docstring).
+
+    Destinations and the overflow verdict are already fixed over the full
+    shard; this routine partitions/packs each position-half separately and
+    issues half A's ``all_to_all`` before half B's partition, opening the
+    exchange/compute overlap window.  Bit-identity with the synchronous
+    tail holds because (a) the stable partition of a position-prefix is a
+    prefix of the stable partition of the whole, so per (sender, group)
+    the A-chunk's elements all precede the B-chunk's in the synchronous
+    chunk order; (b) the shared truncation budget keeps exactly the first
+    ``min(counts, cap)`` elements of that concatenated order; and (c)
+    arrivals concatenate per sender as [A-slots | B-slots], which the
+    stable compaction flattens back into the synchronous arrival order.
+    """
+    n = arrays["k"].shape[0]
+    g, cap = level.groups, level.capacity
+    sent = sampling.sentinel_for(arrays["k"].dtype)
+    h = n // 2
+    slot = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    budget = jnp.full((g,), cap, jnp.int32)
+    recv, recv_counts, sent_counts = [], [], []
+    for lo in (0, h):
+        sub = jax.tree.map(lambda a: a[lo:lo + h], arrays)
+        parts, offsets = stable_partition(
+            dest_keep[lo:lo + h], sub, g + 1, tile_for(h, tile), engine=engine
+        )
+        counts = jnp.diff(offsets)[:g]
+        send = jnp.minimum(counts, budget)  # B spends what A left over
+        budget = budget - send
+        idx = offsets[:g, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+        in_cap = slot < send[:, None]
+        gidx = jnp.minimum(idx, h - 1).reshape(-1)
+
+        def pack(a, fill):
+            chunk = jnp.take(a, gidx, axis=0).reshape((g, cap) + a.shape[1:])
+            mask = in_cap.reshape((g, cap) + (1,) * (a.ndim - 1))
+            return jnp.where(mask, chunk, fill)
+
+        def a2a(x):
+            return jax.lax.all_to_all(
+                x, level.axis, split_axis=0, concat_axis=0, tiled=True
+            )
+
+        key_part, val_part = _split_kv(parts)
+        # the collective is ISSUED here, before the next loop iteration
+        # touches half B — nothing after this point depends on it until
+        # reassembly, which is the data-dependence gap XLA's latency-hiding
+        # scheduler fills with half B's partition/pack
+        recv.append({
+            "k": a2a(pack(key_part, sent)),
+            **jax.tree.map(
+                lambda a: a2a(pack(a, jnp.zeros((), a.dtype))), val_part
+            ),
+        })
+        recv_counts.append(a2a(send))
+        sent_counts.append(send)
+
+    if track:
+        per_elem = sum(
+            jnp.dtype(leaf.dtype).itemsize for leaf in jax.tree.leaves(arrays)
+        )
+        bytes_a = jnp.sum(sent_counts[0]).astype(jnp.float32) * per_elem
+        bytes_b = jnp.sum(sent_counts[1]).astype(jnp.float32) * per_elem
+        obs.jit_observe(
+            "dist.collective_bytes", bytes_a + bytes_b,
+            level=str(level_idx), axis=str(level.axis),
+            padded_bytes=2 * g * cap * per_elem, overlap="on",
+        )
+        # the fraction of this level's payload whose transfer can hide
+        # behind local partition work (half A's bytes overlap half B's
+        # partition; by symmetry of the halves either ratio is reported)
+        obs.jit_observe(
+            "dist.overlap_efficiency",
+            bytes_a / jnp.maximum(bytes_a + bytes_b, 1.0),
+            level=str(level_idx), axis=str(level.axis),
+        )
+
+    # per sender: [A-slots | B-slots] — the synchronous stable chunk order
+    flat = {}
+    for name in recv[0]:
+        both = jnp.concatenate([recv[0][name], recv[1][name]], axis=1)
+        flat[name] = both.reshape((2 * g * cap,) + both.shape[2:])
+    arrived = jnp.concatenate(
+        [slot < recv_counts[0][:, None], slot < recv_counts[1][:, None]], axis=1
+    ).reshape(-1)
+    m_next = jnp.sum(recv_counts[0] + recv_counts[1]).astype(jnp.int32)
+    out = compact_valid(flat, arrived, tile_for(2 * g * cap, tile), engine)
+    # every slot past n_out is invalid (m_next <= g * cap by the shared
+    # budget), so the slice drops only pads the compaction pushed behind
+    return jax.tree.map(lambda a: a[:g * cap], out), m_next, overflowed

@@ -27,15 +27,43 @@ per-(sender, group) chunk gets ``ceil(n_local / groups) * slack`` slots —
 overpartitioning safety, learned per (n_local, d, dtype) by the ``dist:``
 plan family (``ops/plan.py``).  Padded shard size after level l is
 therefore ~``slack * n_local`` at every level, not ``slack**l``.
+
+**Topology-aware ordering** (DESIGN.md §13.4): the Fugaku evaluation
+(2305.05245) attributes parallel samplesort's scaling wall to per-level
+collective cost, which differs per mesh axis (intra-node vs inter-node
+interconnect).  :func:`order_axes` reorders the level schedule to minimise
+a static cost model (:func:`schedule_cost`) with two terms per level:
+
+  * the ``all_to_all`` wire term — ``(groups - 1)/groups`` of the padded
+    frame actually crosses the axis, divided by that axis's bandwidth.
+    Under expectation-based capacities this term is order-*invariant*
+    (capacity depends only on the level's own fan-in), so it anchors the
+    model but does not drive the ordering;
+  * the splitter/control term — level l's sample ``all_gather`` (and the
+    re-split ``psum``/``pmax``) span the whole remaining domain
+    ``axes[l:]`` and are bottlenecked by the *slowest* axis in it.  This
+    term is what ordering moves: an axis placed early drops out of every
+    deeper domain, so slow (low-bandwidth) axes schedule first and the
+    highest-fan-in exchange runs late, over a domain containing only the
+    cheapest collectives.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Tuple, Union
+import itertools
+from typing import Mapping, Optional, Tuple, Union
 
 from repro.core import sampling
 
-__all__ = ["Level", "plan_schedule", "normalize_axes", "default_oversample"]
+__all__ = [
+    "Level",
+    "plan_schedule",
+    "normalize_axes",
+    "default_oversample",
+    "axis_bandwidths",
+    "schedule_cost",
+    "order_axes",
+]
 
 AxisNames = Union[str, Tuple[str, ...]]
 
@@ -114,3 +142,90 @@ def plan_schedule(
         )
         n = g * cap
     return tuple(levels)
+
+
+def axis_bandwidths(axis_sizes: Mapping[str, int]) -> dict:
+    """Default relative collective bandwidth per mesh axis.
+
+    Mesh axes are conventionally declared outermost-first — the slowest
+    interconnect (inter-pod DCN) outermost, the fastest (intra-pod ICI)
+    innermost — so the default assigns each axis ``4**position`` in
+    declaration order.  Pass an explicit mapping to :func:`order_axes` /
+    :func:`schedule_cost` when the machine differs; only ratios matter.
+
+    >>> axis_bandwidths({"pod": 2, "data": 4})
+    {'pod': 1.0, 'data': 4.0}
+    """
+    return {a: 4.0 ** i for i, a in enumerate(axis_sizes)}
+
+
+def schedule_cost(
+    schedule: Tuple[Level, ...],
+    bandwidths: Mapping[str, float],
+    itemsize: int = 4,
+) -> float:
+    """Static per-level collective cost of a schedule (relative units).
+
+    Extends ``benchmarks/sort_distributed.py``'s volume accounting with
+    bandwidth weights: per level, the ``all_to_all`` moves
+    ``(groups - 1) * capacity * itemsize`` bytes off-shard over the
+    level's axis, and the splitter/control collectives gather
+    ``oversample * itemsize`` bytes from every *other* shard of the
+    remaining domain, bottlenecked by the slowest axis still in it.
+
+    >>> sched = plan_schedule({"pod": 2, "data": 4}, ("pod", "data"), 8192)
+    >>> swapped = plan_schedule({"pod": 2, "data": 4}, ("data", "pod"), 8192)
+    >>> bw = axis_bandwidths({"pod": 2, "data": 4})
+    >>> schedule_cost(sched, bw) < schedule_cost(swapped, bw)  # slow axis first
+    True
+    """
+    total = 0.0
+    domain_size = {}
+    acc = 1
+    for lv in reversed(schedule):
+        acc *= lv.groups
+        domain_size[lv.axis] = acc
+    for lv in schedule:
+        wire = (lv.groups - 1) * lv.capacity * itemsize
+        total += wire / bandwidths.get(lv.axis, 1.0)
+        dsz = domain_size[lv.axis]
+        min_bw = min(bandwidths.get(a, 1.0) for a in lv.domain)
+        total += lv.oversample * itemsize * (dsz - 1) / min_bw
+    return total
+
+
+def order_axes(
+    axis_sizes: Mapping[str, int],
+    axes: AxisNames,
+    n_local: int,
+    *,
+    bandwidths: Optional[Mapping[str, float]] = None,
+    slack: float = 2.0,
+    oversample: int = 0,
+) -> Tuple[str, ...]:
+    """The axis order minimising :func:`schedule_cost` (ties keep the
+    caller's order).  Axis counts are tiny, so plain permutation
+    enumeration; the result feeds :func:`plan_schedule` and is persisted
+    as the ``dist:`` plan's ``axis_order`` dimension (``ops/plan.py``).
+
+    >>> order_axes({"pod": 2, "data": 4}, ("data", "pod"), 8192)
+    ('pod', 'data')
+    >>> order_axes({"pod": 2, "data": 4}, ("data", "pod"), 8192,
+    ...            bandwidths={"pod": 4.0, "data": 1.0})
+    ('data', 'pod')
+    """
+    names = normalize_axes(axes)
+    if len(names) < 2:
+        return names
+    bw = dict(bandwidths) if bandwidths is not None else axis_bandwidths(axis_sizes)
+    best, best_cost = names, None
+    # permutations() emits the caller's order first, and only a strictly
+    # cheaper permutation displaces it — ties keep the given order
+    for perm in itertools.permutations(names):
+        sched = plan_schedule(
+            axis_sizes, perm, n_local, slack=slack, oversample=oversample
+        )
+        cost = schedule_cost(sched, bw)
+        if best_cost is None or cost < best_cost - 1e-9:
+            best, best_cost = perm, cost
+    return tuple(best)

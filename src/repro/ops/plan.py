@@ -73,7 +73,7 @@ import json
 import os
 import time
 from dataclasses import asdict
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -242,14 +242,17 @@ def _stream_tiles() -> tuple:
 class DistPlan:
     """Tuned knobs for one distributed-sort family (DESIGN.md §8): the
     capacity factor (slack over the balanced per-pair expectation), the
-    per-shard oversampling, and the partition engine ``repro.dist`` uses
-    for every level of a sort at this (n_local, d, dtype)."""
+    per-shard oversampling, the partition engine ``repro.dist`` uses for
+    every level of a sort at this (n_local, d, dtype), and — when
+    ``dist.sort(order="auto")`` has run — the topology-chosen level order
+    (DESIGN.md §13.4; empty means "no recorded preference")."""
 
     n_local: int
     d: int
     slack: float = 2.0
     oversample: int = 32
     engine: str = "xla"
+    axis_order: Tuple[str, ...] = ()
 
 
 # capacity factors and oversample multipliers the dist autotune sweeps —
@@ -670,6 +673,7 @@ class PlanCache:
         key = self._dist_key(n_local, d, dtype)
         entry = self._plans.get(key)
         cfg = entry.get("config") if isinstance(entry, dict) else None
+        axis_order = self._dist_axis_order(cfg)
         if isinstance(cfg, dict):
             slack = cfg.get("slack")
             ovs = cfg.get("oversample")
@@ -680,13 +684,15 @@ class PlanCache:
                 and eng in ("xla", "pallas")
             ):
                 obs.count("plan_cache.hit", family="dist")
-                return DistPlan(n_local, d, float(slack), ovs, engine or eng)
+                return DistPlan(
+                    n_local, d, float(slack), ovs, engine or eng, axis_order
+                )
         obs.count("plan_cache.miss", family="dist")
         if tune:
             plan = self._autotune_dist(n_local, d, dtype)
             if engine is not None:
                 plan = dataclasses.replace(plan, engine=engine)
-            return plan
+            return dataclasses.replace(plan, axis_order=axis_order)
         from repro.dist.levels import default_oversample  # lazy: dist layers on ops
 
         default_eng = engine or self.engine_hint(n_local, dtype) or (
@@ -694,8 +700,36 @@ class PlanCache:
         )
         return DistPlan(
             n_local, d, oversample=default_oversample(n_local * d),
-            engine=default_eng,
+            engine=default_eng, axis_order=axis_order,
         )
+
+    @staticmethod
+    def _dist_axis_order(cfg: Any) -> Tuple[str, ...]:
+        if isinstance(cfg, dict):
+            ao = cfg.get("axis_order")
+            if isinstance(ao, list) and all(isinstance(a, str) for a in ao):
+                return tuple(ao)
+        return ()
+
+    def record_dist_axis_order(
+        self, n_local: int, d: int, dtype, order: Tuple[str, ...]
+    ) -> None:
+        """Persist the topology-chosen level order as a dimension of the
+        ``dist:`` plan entry (DESIGN.md §13.4) — consulted by later
+        ``dist.sort(order="auto")`` calls at the same (n_local, d, dtype),
+        and carried through a later capacity autotune of the same entry.
+
+        >>> import os, tempfile
+        >>> import jax.numpy as jnp
+        >>> pc = PlanCache(path=os.path.join(tempfile.mkdtemp(), "p.json"))
+        >>> pc.record_dist_axis_order(8192, 8, jnp.float32, ("pod", "data"))
+        >>> pc.dist_plan(8192, 8, jnp.float32).axis_order
+        ('pod', 'data')
+        """
+        key = self._dist_key(n_local, d, dtype)
+        entry = self._plans.setdefault(key, {})
+        entry.setdefault("config", {})["axis_order"] = [str(a) for a in order]
+        self._save()
 
     def _autotune_dist(self, n_local: int, d: int, dtype) -> DistPlan:
         """Host-side capacity simulation: for ascending (slack, oversample)
@@ -773,11 +807,17 @@ class PlanCache:
             "pallas" if jax.default_backend() == "tpu" else "xla"
         )
         best = dataclasses.replace(best, engine=eng)
+        prev = self._plans.get(key)
+        prev_order = self._dist_axis_order(
+            prev.get("config") if isinstance(prev, dict) else None
+        )
         self._plans[key] = {
             "config": {
                 "slack": best.slack,
                 "oversample": best.oversample,
                 "engine": best.engine,
+                # a recorded topology order survives a capacity re-tune
+                **({"axis_order": list(prev_order)} if prev_order else {}),
             },
             "engine": best.engine,
             "sim_max_fill": round(float(fill), 3),

@@ -155,6 +155,75 @@ def test_d1_rank_k_matches_ops():
     np.testing.assert_array_equal(np.asarray(v), np.sort(x)[::-1][:7])
 
 
+def test_order_axes_slow_axis_first():
+    """Default bandwidth model (outermost axis slowest): the slow axis
+    schedules first so it drops out of every deeper splitter-collective
+    domain; explicit bandwidths invert the choice (DESIGN.md §13.4)."""
+    order = dist.order_axes({"pod": 2, "data": 4}, ("data", "pod"), 8192)
+    assert order == ("pod", "data")
+    order = dist.order_axes(
+        {"pod": 2, "data": 4}, ("data", "pod"), 8192,
+        bandwidths={"pod": 4.0, "data": 1.0},
+    )
+    assert order == ("data", "pod")
+    # single axis / uniform bandwidths: the caller's order is kept (ties
+    # never displace it)
+    assert dist.order_axes({"data": 8}, "data", 8192) == ("data",)
+    order = dist.order_axes(
+        {"pod": 2, "data": 2}, ("data", "pod"), 8192,
+        bandwidths={"pod": 1.0, "data": 1.0},
+    )
+    assert order == ("data", "pod")
+
+
+def test_schedule_cost_ranks_orders():
+    from repro.dist.levels import axis_bandwidths
+
+    sizes = {"pod": 2, "data": 4}
+    bw = axis_bandwidths(sizes)
+    slow_first = plan_schedule(sizes, ("pod", "data"), 8192)
+    fast_first = plan_schedule(sizes, ("data", "pod"), 8192)
+    assert dist.schedule_cost(slow_first, bw) < dist.schedule_cost(fast_first, bw)
+    # the a2a wire term alone is order-invariant under expectation-based
+    # capacities (capacity depends only on the level's own fan-in) — the
+    # splitter/control term is what ordering moves
+    a = sum((lv.groups - 1) * lv.capacity for lv in slow_first)
+    b = sum((lv.groups - 1) * lv.capacity for lv in fast_first)
+    assert a == b
+
+
+def test_dist_plan_axis_order_roundtrip(tmp_path):
+    pc = PlanCache(path=str(tmp_path / "plans.json"))
+    assert pc.dist_plan(8192, 8, jnp.float32).axis_order == ()
+    pc.record_dist_axis_order(8192, 8, jnp.float32, ("pod", "data"))
+    assert pc.dist_plan(8192, 8, jnp.float32).axis_order == ("pod", "data")
+    # persisted across cache instances, and a capacity re-tune keeps it
+    pc2 = PlanCache(path=str(tmp_path / "plans.json"))
+    assert pc2.dist_plan(8192, 8, jnp.float32).axis_order == ("pod", "data")
+    tuned = pc2.dist_plan(8192, 8, jnp.float32, tune=True)
+    assert tuned.axis_order == ("pod", "data")
+
+
+def test_d1_overlap_degenerate():
+    # d == 1 with overlap on: the half-shard protocol must degrade to the
+    # same output as the synchronous exchange (uint32 view: sentinel tails
+    # decode to NaN for float keys)
+    mesh = jax.make_mesh((1,), ("data",))
+    x = make_input("Uniform", 512, np.float32, seed=13)
+    o_s, c_s, _ = _run_sort(mesh, "data", x)
+    o_o, c_o, ovf = _run_sort(mesh, "data", x, overlap=True)
+    assert not ovf.any()
+    np.testing.assert_array_equal(c_s, c_o)
+    np.testing.assert_array_equal(o_s.view(np.uint32), o_o.view(np.uint32))
+
+
+def test_order_rejects_unknown_mode():
+    mesh = jax.make_mesh((1,), ("data",))
+    x = jnp.arange(256, dtype=jnp.float32)
+    with pytest.raises(ValueError, match="order"):
+        dist.sort(x, mesh, "data", cfg=_CFG, order="fastest")
+
+
 def test_pack_by_length_mesh_degenerate_falls_back():
     from repro.data.pipeline import pack_by_length
 
@@ -357,6 +426,81 @@ def test_resplit_retry_obs_metrics():
         obs.enabled(False)
         obs.reset()
         jax.clear_caches()
+
+
+# -- overlap-scheduled exchange at d = 8 (DESIGN.md §13) --------------------
+
+
+@needs_8
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+@pytest.mark.parametrize("dist_name", sorted(DISTRIBUTIONS))
+def test_overlap_bit_identical_to_sync(dist_name, dtype):
+    """Acceptance: the overlap schedule staggers only each half-shard's
+    partition/pack/all_to_all behind a SHARED truncation budget, so its
+    output is bit-identical to the synchronous exchange — all nine paper
+    distributions x {f32, i32}, multi-level (2-axis) mesh (uint32 view:
+    float sentinel tails decode to NaN)."""
+    x = make_input(dist_name, _N, dtype, seed=42)
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+    o_s, c_s, v_s = _run_sort(mesh2, ("pod", "data"), x)
+    o_o, c_o, v_o = _run_sort(mesh2, ("pod", "data"), x, overlap=True)
+    np.testing.assert_array_equal(c_s, c_o)
+    np.testing.assert_array_equal(v_s, v_o)
+    np.testing.assert_array_equal(o_s.view(np.uint32), o_o.view(np.uint32))
+
+
+@needs_8
+def test_overlap_one_axis_payload_and_retry():
+    """1-axis overlap: payload rows ride the half-shard frames bit-exactly,
+    and the re-split retry (a full-shard decision by construction)
+    composes with the overlap schedule."""
+    mesh = jax.make_mesh((8,), ("data",))
+    x = make_input("TwoDup", _N, np.int32, seed=5)
+    vals = np.arange(_N, dtype=np.int32)
+    xs = jax.device_put(jnp.asarray(x), NamedSharding(mesh, P("data")))
+    vs = jax.device_put(jnp.asarray(vals), NamedSharding(mesh, P("data")))
+    want = jax.jit(
+        lambda a, v: dist.sort(a, mesh, "data", values=v, cfg=_CFG)
+    )(xs, vs)
+    got = jax.jit(
+        lambda a, v: dist.sort(a, mesh, "data", values=v, cfg=_CFG, overlap=True)
+    )(xs, vs)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+    # the converging-retry config, overlapped: still converges, still
+    # bit-identical to its synchronous twin
+    xe = make_input("Exponential", _N, np.float32, seed=42)
+    o_s, c_s, v_s = _run_sort(mesh, "data", xe, slack=1.25, oversample=8)
+    o_o, c_o, v_o = _run_sort(
+        mesh, "data", xe, slack=1.25, oversample=8, overlap=True
+    )
+    assert not v_s.any() and not v_o.any()
+    np.testing.assert_array_equal(c_s, c_o)
+    np.testing.assert_array_equal(o_s.view(np.uint32), o_o.view(np.uint32))
+
+
+@needs_8
+def test_auto_order_sorts_and_records(tmp_path, monkeypatch):
+    """``order="auto"`` on a mis-declared axis tuple (fast axis first):
+    the cost model reorders to slow-first, the sort is still globally
+    correct, and the choice lands in the ``dist:`` plan's ``axis_order``
+    for the next call to reuse without re-costing."""
+    import repro.ops.plan as plan_mod
+
+    pc = plan_mod.PlanCache(path=str(tmp_path / "plans.json"))
+    monkeypatch.setattr(plan_mod, "default_cache", pc)
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+    x = make_input("Uniform", _N, np.float32, seed=42)
+    want = _keyspace_sorted(x).view(np.uint32)
+    out, counts, ovf = _run_sort(mesh2, ("data", "pod"), x, order="auto")
+    assert not ovf.any()
+    np.testing.assert_array_equal(_valid_concat(out, counts).view(np.uint32), want)
+    p = pc.dist_plan(_N // 8, 8, jnp.float32)
+    assert tuple(p.axis_order) == ("pod", "data")
+    # second call: the persisted order wins (same result, no re-record)
+    out2, _, ovf2 = _run_sort(mesh2, ("data", "pod"), x, order="auto")
+    assert not ovf2.any()
+    np.testing.assert_array_equal(out.view(np.uint32), out2.view(np.uint32))
 
 
 # -- rewired callers at d = 8 ----------------------------------------------

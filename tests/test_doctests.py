@@ -1,12 +1,12 @@
-"""Tier-1 wiring for the ``repro.ops`` / ``repro.stream`` doctest suites
-(ISSUE 3 / ISSUE 4 satellites).
+"""Tier-1 wiring for the ``repro.ops`` / ``repro.stream`` / ``repro.dist``
+/ ``repro.checkpoint`` doctest suites (ISSUE 3 / ISSUE 4 / ISSUE 10
+satellites).
 
-CI also runs ``pytest --doctest-modules src/repro/ops src/repro/stream``
-in the docs job; this file puts the same examples under the tier-1
-umbrella (``pytest -x -q`` from the repo root), so a docstring example
-that rots fails the default test run, not just the docs job.  Every
-public ``repro.ops`` / ``repro.stream`` module must carry at least one
-runnable example.
+CI also runs ``pytest --doctest-modules`` over the same packages in the
+docs job; this file puts the same examples under the tier-1 umbrella
+(``pytest -x -q`` from the repo root), so a docstring example that rots
+fails the default test run, not just the docs job.  Every public module
+of these packages must carry at least one runnable, d=1-safe example.
 """
 import doctest
 import importlib
@@ -24,6 +24,11 @@ OPS_MODULES = [
     "repro.stream.api",
     "repro.stream.merge",
     "repro.stream.runs",
+    "repro.dist.api",
+    "repro.dist.levels",
+    "repro.dist.exchange",
+    "repro.dist.elastic",
+    "repro.checkpoint.manager",
 ]
 
 
